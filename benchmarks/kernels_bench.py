@@ -1,0 +1,75 @@
+"""Kernel microbenchmarks: us/call for each Pallas kernel (interpret mode
+on CPU — structural timing only; real perf comes from the TPU dry-run
+roofline) and for the jnp reference, plus the derived ratio."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(_settings=None):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    B, S, H, KV, dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+    rows.append(("flash_attention_pallas",
+                 _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v),
+                 "interpret"))
+    rows.append(("flash_attention_ref",
+                 _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+                       q, k, v), "xla_cpu"))
+
+    qd = q[:, 0]
+    pos = jnp.asarray([S - 1])
+    rows.append(("decode_attention_pallas",
+                 _time(lambda a, b, c, p: ops.decode_attention(a, b, c, p),
+                       qd, k, v, pos), "interpret"))
+    rows.append(("decode_attention_ref",
+                 _time(jax.jit(lambda a, b, c, p:
+                               ref.decode_attention_ref(a, b, c, p)),
+                       qd, k, v, pos), "xla_cpu"))
+
+    x = jax.random.normal(ks[3], (256, 128), jnp.float32)
+    c = jax.random.normal(ks[0], (8, 128), jnp.float32)
+    rows.append(("router_scores_pallas",
+                 _time(lambda a, b: ops.router_scores(a, b, 10.0), x, c),
+                 "interpret"))
+    rows.append(("router_scores_ref",
+                 _time(jax.jit(lambda a, b: ref.router_scores_ref(a, b, 10.0)),
+                       x, c), "xla_cpu"))
+
+    qc = jax.random.normal(ks[1], (1, 4, 64, 2, 32), jnp.float32)
+    vc = jax.random.normal(ks[2], (1, 4, 64, 2, 32), jnp.float32)
+    cum = jnp.cumsum(-jnp.abs(jax.random.normal(ks[3], (1, 4, 64, 2))) * 0.1,
+                     axis=2)
+    rows.append(("chunk_scan_pallas",
+                 _time(lambda a, b, c_, d: ops.chunk_scan(a, b, c_, d),
+                       qc, qc, vc, cum), "interpret"))
+    rows.append(("chunk_scan_ref",
+                 _time(jax.jit(lambda a, b, c_, d:
+                               ref.chunk_scan_ref(a, b, c_, d)),
+                       qc, qc, vc, cum), "xla_cpu"))
+
+    print("\n== Kernel microbenchmarks (CPU; kernels in interpret mode) ==")
+    print("name,us_per_call,derived")
+    for name, us, tag in rows:
+        print(f"{name},{us:.1f},{tag}")
+    return rows

@@ -1,0 +1,83 @@
+"""Aggregate the dry-run artifacts (experiments/dryrun/*.json) into the
+§Roofline table: three terms, bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and
+cross-pod traffic per (arch × shape × mesh × mode).
+
+Two artifact kinds per case:
+  <case>.json        raw lowering of the scanned (production) program —
+                     proves compile; its cost numbers undercount scanned
+                     stacks (XLA counts a while body once).
+  <case>.probe.json  depth-corrected terms from two unrolled shallow
+                     compiles, f(G) = outside + G·per_group (preferred).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = ("case", "status", "src", "bottleneck", "compute_s", "memory_s",
+          "collective_s", "useful_flops", "xpod_GB", "compile_s")
+
+
+def load_records(dirpath: str = "experiments/dryrun"):
+    raw, probe = {}, {}
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        (probe if path.endswith(".probe.json") else raw)[rec["case"]] = rec
+    return raw, probe
+
+
+def merged_rows(dirpath: str = "experiments/dryrun"):
+    raw, probe = load_records(dirpath)
+    rows = []
+    for case in sorted(set(raw) | set(probe)):
+        r = raw.get(case)
+        p = probe.get(case)
+        best = p if (p and p.get("status") == "ok") else r
+        if best is None:
+            continue
+        if best["status"] != "ok":
+            rows.append({"case": case, "status": best["status"],
+                         "reason": best.get("reason", best.get("error"))})
+            continue
+        rl = best["roofline"]
+        xpod = (best.get("xpod_corrected")
+                if "xpod_corrected" in best
+                else best.get("collectives", {}).get("cross_pod_bytes", 0))
+        rows.append({
+            "case": case, "status": "ok",
+            "src": "probe" if best is p else "raw",
+            "bottleneck": rl["bottleneck"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "useful_flops": rl["useful_flops_ratio"],
+            "xpod_GB": (xpod or 0) / 1e9,
+            "compile_s": r["compile_s"] if (r and "compile_s" in r)
+            else best.get("wall_s", 0),
+            "lowered_ok": bool(r and r["status"] == "ok"),
+        })
+    return rows
+
+
+def run(_settings=None, dirpath: str = "experiments/dryrun"):
+    rows = merged_rows(dirpath)
+    if not rows:
+        print("(no dry-run artifacts found — run repro.launch.dryrun first)")
+        return []
+    print("\n== Roofline table (from compiled dry-run artifacts) ==")
+    print(",".join(HEADER))
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['case']},{r['status']},,,,,,,,")
+            continue
+        print(",".join(str(x) for x in (
+            r["case"], "ok", r["src"], r["bottleneck"],
+            round(r["compute_s"], 4), round(r["memory_s"], 4),
+            round(r["collective_s"], 4), round(r["useful_flops"], 3),
+            round(r["xpod_GB"], 2), r["compile_s"])))
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    nsk = sum(1 for r in rows if r["status"] == "skipped")
+    nerr = len(rows) - ok - nsk
+    print(f"# {ok} ok / {nsk} skipped / {nerr} error")
+    return rows

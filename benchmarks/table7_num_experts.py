@@ -1,0 +1,22 @@
+"""Table 7 analogue: the impact of the number of experts (K = 2, 4, 6).
+
+Paper finding: K=4 stays comparable to dense; K=6 shows fragmentation
+regression (fewer samples per expert at fixed total data). Compute-matched
+per §6.2 (per-expert batch = dense/K, same steps)."""
+from __future__ import annotations
+
+from .common import BenchSettings, fmt_row, run_parity
+
+
+def run(s: BenchSettings):
+    rows = {}
+    for K in (2, 4, 6):
+        res = run_parity(s, K=K)
+        rows[f"{K}_experts"] = res.experts
+        if "dense_baseline" not in rows:
+            rows["dense_baseline"] = res.dense
+        print(fmt_row(f"{K}_experts", res.experts), flush=True)
+    print("\n== Table 7 (impact of number of experts) ==")
+    for n, m in rows.items():
+        print(fmt_row(n, m))
+    return rows

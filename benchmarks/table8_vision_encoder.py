@@ -1,0 +1,28 @@
+"""Table 8 analogue: the impact of the vision encoder used for
+partitioning/routing.
+
+Paper: ViT-L/14 ≳ ViT-B/16 > RN50. The offline analogue varies the frozen
+feature extractor's *capacity* as its feature dimensionality (64/32/8):
+weaker features ⇒ worse clusters ⇒ worse routing ⇒ lower ensemble scores.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from .common import BenchSettings, fmt_row, run_parity
+
+ENCODERS = {"vitL14_proxy_d64": 64, "vitB16_proxy_d32": 32,
+            "rn50_proxy_d8": 8}
+
+
+def run(s: BenchSettings):
+    rows = {}
+    for name, dim in ENCODERS.items():
+        s_enc = BenchSettings(**{**s.__dict__, "feature_dim": dim})
+        res = run_parity(s_enc, K=2)
+        rows[name] = res.experts
+        print(fmt_row(name, res.experts), flush=True)
+    print("\n== Table 8 (impact of vision encoder capacity) ==")
+    for n, m in rows.items():
+        print(fmt_row(n, m))
+    return rows

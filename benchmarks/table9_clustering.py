@@ -1,0 +1,20 @@
+"""Table 9 analogue: the impact of the clustering algorithm —
+single-stage balanced spherical k-means (paper main) vs the 2-stage variant
+(fine unbalanced k=1024 → coarse balanced; McAllister et al. style)."""
+from __future__ import annotations
+
+from .common import BenchSettings, fmt_row, run_parity
+
+
+def run(s: BenchSettings):
+    rows = {}
+    for alg, name in (("balanced", "balanced_kmeans"),
+                      ("two_stage", "two_stage_balanced_kmeans")):
+        s_alg = BenchSettings(**{**s.__dict__, "clustering": alg})
+        res = run_parity(s_alg, K=2)
+        rows[name] = res.experts
+        print(fmt_row(name, res.experts), flush=True)
+    print("\n== Table 9 (impact of clustering algorithm) ==")
+    for n, m in rows.items():
+        print(fmt_row(n, m))
+    return rows

@@ -1,0 +1,30 @@
+"""Serve a trained decentralized ensemble with batched requests.
+
+Requires a run directory from examples/train_decentralized.py (or
+repro.launch.train). Routes each request on its frozen-encoder features,
+decodes with the top-1 expert (compute-matched, paper §5.2), and reports
+throughput + routing stats. Use --strategy mixture for the exact Eq. 27
+top-k probability mixture.
+
+    PYTHONPATH=src python examples/train_decentralized.py --steps 100
+    PYTHONPATH=src python examples/serve_ensemble.py
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run", default="/tmp/repro_decentralized")
+    ap.add_argument("--arch", default="xlstm_125m")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--strategy", choices=["top1", "mixture"],
+                    default="top1")
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--run", args.run, "--arch", args.arch,
+           "--requests", str(args.requests), "--strategy", args.strategy,
+           "--new-tokens", "24"]
+    print("running:", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,8 @@
+"""repro: Decentralized Autoregressive Generation — a JAX framework.
+
+Core: the paper's discrete-time DFM theory + decentralized expert training
+with a parameter-free centroid router; substrates: model zoo, data pipeline,
+optimizer, checkpointing, pjit training, KV-cache/ensemble serving, Pallas
+TPU kernels, multi-pod launch + roofline tooling.
+"""
+__version__ = "1.0.0"

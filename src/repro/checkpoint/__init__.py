@@ -1,0 +1,2 @@
+from .ckpt import (latest_step, load, load_router, restore_expert, save,
+                   save_expert, save_router)

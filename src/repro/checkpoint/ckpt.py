@@ -1,0 +1,104 @@
+"""Per-expert checkpointing (npz-based; orbax is not available offline).
+
+The paper's fault-isolation claim: each expert checkpoints *independently*
+— one expert's node failure never forces a global restart. Layout:
+
+    <dir>/expert_<k>/step_<n>.npz      (params + optimizer state + step)
+    <dir>/router.npz                    (centroids — the parameter-free router)
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        tag = "T" if isinstance(tree, tuple) else "L"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{tag}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return jnp.asarray(node)
+        keys = list(node.keys())
+        if keys and all(re.fullmatch(r"__[TL]\d+", k) for k in keys):
+            items = sorted(keys, key=lambda k: int(k[3:]))
+            seq = [rebuild(node[k]) for k in items]
+            return tuple(seq) if keys[0][2] == "T" else list(seq)
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(tree)
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path, **flat)
+
+
+def load(path: str):
+    with np.load(path, allow_pickle=False) as data:
+        return _unflatten({k: data[k] for k in data.files})
+
+
+def expert_dir(base: str, expert: int) -> str:
+    return os.path.join(base, f"expert_{expert}")
+
+
+def save_expert(base: str, expert: int, step: int, state) -> str:
+    path = os.path.join(expert_dir(base, expert), f"step_{step}.npz")
+    save(path, state)
+    return path
+
+
+def latest_step(base: str, expert: int) -> Optional[int]:
+    d = expert_dir(base, expert)
+    if not os.path.isdir(d):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(d)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_expert(base: str, expert: int,
+                   step: Optional[int] = None):
+    step = latest_step(base, expert) if step is None else step
+    if step is None:
+        return None, None
+    path = os.path.join(expert_dir(base, expert), f"step_{step}.npz")
+    return load(path), step
+
+
+def save_router(base: str, centroids: np.ndarray,
+                temperature: float, top_k: int) -> None:
+    os.makedirs(base, exist_ok=True)
+    np.savez(os.path.join(base, "router.npz"), centroids=centroids,
+             temperature=np.float64(temperature), top_k=np.int64(top_k))
+
+
+def load_router(base: str):
+    with np.load(os.path.join(base, "router.npz")) as d:
+        return d["centroids"], float(d["temperature"]), int(d["top_k"])

@@ -1,0 +1,4 @@
+"""Assigned architecture configs (see each module for source citation)."""
+from .base import (ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig,
+                   MoEConfig, SSMConfig, all_configs, get_config,
+                   get_smoke_config)

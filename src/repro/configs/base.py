@@ -1,0 +1,151 @@
+"""Unified architecture config + registry + assigned input shapes.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG`` (the exact full-scale config, citation in ``source``) and
+``smoke_config()`` (a reduced same-family variant: ≤2 layers, d_model ≤ 512,
+≤4 experts — used by the CPU smoke tests). The full configs are exercised
+only through the dry-run (ShapeDtypeStruct; no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 0
+    n_shared: int = 0             # always-on shared experts (DeepSeek-MoE)
+    d_ff_expert: int = 0          # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state: int = 64               # SSM state dim N (Mamba2) / mLSTM head dim
+    conv: int = 4                 # local conv width (stubbed as identity-pad)
+    expand: int = 2               # d_inner = expand * d_model
+    chunk: int = 256              # chunkwise-scan block length
+    slstm_every: int = 0          # xLSTM: every k-th block is an sLSTM block
+    shared_attn_every: int = 0    # zamba2: shared attention block period
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                   # dense | moe | vlm | audio | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    source: str = ""              # citation for the assigned config
+    d_head: int = 0               # 0 → d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0       # 0 → full attention; >0 → window size
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # modality frontends (stubs — precomputed embeddings, see DESIGN.md)
+    vision_dim: int = 0           # vlm: dim of incoming patch embeddings
+    n_patches: int = 0            # vlm: image tokens per sample
+    audio_dim: int = 0            # audio: dim of incoming frame embeddings
+    n_audio_frames: int = 0       # audio: encoder sequence length
+    n_enc_layers: int = 0         # audio: encoder depth (enc-dec)
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # §Perf H3b: dtype of the S×S attention logits/softmax. f32 is the
+    # safe default; bf16 halves the quadratic attention traffic (the
+    # dominant memory term at train_4k) at a known small quality cost.
+    attn_softmax_dtype: str = "float32"
+    # remat policy for the scanned layer stack: none | full | dots
+    remat: str = "full"
+    # unroll the layer stacks into straight-line HLO instead of lax.scan —
+    # used by the dry-run depth probes (XLA cost analysis counts a while
+    # body once, so scanned stacks undercount FLOPs/bytes by ~n_layers;
+    # the probes fit f(G) = outside + G·per_layer on unrolled G ∈ {1,2})
+    unroll: bool = False
+
+    # §Perf H2: pad the vocab (embedding + unembedding rows) up to a
+    # multiple of this so the vocab dim shards over the ``model`` mesh axis
+    # even for odd tokenizer sizes (whisper 51865, internvl 92553, granite
+    # 49155). 0 = no padding (paper-faithful sizes).
+    pad_vocab_to: int = 0
+
+    @property
+    def padded_vocab(self) -> int:
+        if self.pad_vocab_to <= 0:
+            return self.vocab
+        m = self.pad_vocab_to
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.family == "audio"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """long_500k needs sub-quadratic decode: recurrent state or a
+        sliding window. Enc-dec audio is out of family (see DESIGN.md)."""
+        if self.family == "audio":
+            return False
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        return replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "llama3_405b", "qwen3_moe_235b_a22b", "internvl2_2b", "whisper_small",
+    "xlstm_125m", "deepseek_moe_16b", "granite_3_8b", "qwen3_8b",
+    "phi3_medium_14b", "zamba2_2_7b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod.smoke_config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

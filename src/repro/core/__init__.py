@@ -1,0 +1,14 @@
+"""Core contribution of the paper: discrete-time Discrete Flow Matching,
+autoregressive generation as its special case, and the exact decentralization
+of the generating velocity into router-weighted expert velocities."""
+
+from . import autoregressive, clustering, decentralize, dfm, ensemble, router
+
+__all__ = [
+    "autoregressive",
+    "clustering",
+    "decentralize",
+    "dfm",
+    "ensemble",
+    "router",
+]

@@ -1,0 +1,144 @@
+"""Autoregressive sampling as an instance of discrete-time DFM (paper §4.2).
+
+The objects here implement Eq. 18–22 exactly on the enumerable space
+``[d]^N`` (positions are 0-indexed: at timestep ``t`` exactly ``P + t``
+tokens are revealed, and the single active position is ``j(t) = P + t``).
+
+The bridge to production: ``next_token_conditional`` is what a trained
+language model approximates; ``velocity_from_conditional`` turns it into the
+1-sparse probability-generating velocity of Eq. 22's marginalization. The
+serving engine (repro/serve) realises ``apply_sampling_rule`` restricted to
+the active position — which, by the paper's Theorem, is exactly ordinary
+autoregressive decoding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .dfm import FactorizedPath, decode, encode, enumerate_states, n_states
+
+Array = jnp.ndarray
+
+
+def mask_state(x1_tokens: np.ndarray, reveal: int, mask_id: int) -> np.ndarray:
+    """First ``reveal`` tokens of x1, rest = mask (the C-coupling of Eq. 18)."""
+    out = np.full_like(x1_tokens, mask_id)
+    out[..., :reveal] = x1_tokens[..., :reveal]
+    return out
+
+
+def masked_coupling(q: Array, P: int, d: int, N: int, mask_id: int) -> Array:
+    """π(x0, x1) for the coupling of Eq. 18 with a fixed prefix length P:
+    x0 = (x1[:P], m, ..., m), x1 ~ q. Shape (S, S)."""
+    S = n_states(d, N)
+    states = enumerate_states(d, N)
+    pi = np.zeros((S, S))
+    x0_idx = encode(mask_state(states, P, mask_id), d)
+    q_np = np.asarray(q)
+    for x1 in range(S):
+        pi[x0_idx[x1], x1] += q_np[x1]
+    return jnp.asarray(pi)
+
+
+def ar_scheduler(P: int, N: int, T: int) -> np.ndarray:
+    """κ_t^i of Eq. 20 (0-indexed): κ[t, i] = 1 iff position i revealed at t,
+    i.e. i < P + t. Shape (T+1, N)."""
+    kappa = np.zeros((T + 1, N))
+    for t in range(T + 1):
+        kappa[t, : min(N, P + t)] = 1.0
+    return kappa
+
+
+def ar_path(q: Array, P: int, d: int, N: int, mask_id: int) -> FactorizedPath:
+    """The AR conditional probability path of Eq. 19–20 as a FactorizedPath.
+
+    T = N − P steps (all tokens revealed at t = T).
+    ``cond[t][x0, x1, i, a] = κ_t^i δ_{x1^i}(a) + (1 − κ_t^i) δ_{x0^i}(a)``.
+    """
+    S = n_states(d, N)
+    states = enumerate_states(d, N)
+    T = N - P
+    pi = masked_coupling(q, P, d, N, mask_id)
+    kappa = ar_scheduler(P, N, T)
+    onehot = np.eye(d)[states]  # (S, N, d): onehot[x, i, a] = δ(x^i = a)
+    cond = []
+    for t in range(T + 1):
+        k = kappa[t][None, None, :, None]                     # (1,1,N,1)
+        c = k * onehot[None, :, :, :] + (1 - k) * onehot[:, None, :, :]
+        cond.append(jnp.asarray(c))
+    return FactorizedPath(d=d, N=N, pi=pi, cond=cond)
+
+
+def ar_conditional_velocity(t: int, P: int, d: int, N: int,
+                            mask_id: int) -> Array:
+    """Eq. 22: u_t^i(a, z | x0, x1) = (δ_{x_{t+1}}(a) − δ_{x_t}(a)) 1[z = x_t].
+
+    Since x0 is a deterministic function of x1 under the coupling, we index
+    conditionals by (x0, x1) but only the x1 slice matters. Returns
+    (S, S, N, d, S): [x0, x1, i, a, z].
+    """
+    S = n_states(d, N)
+    states = enumerate_states(d, N)
+    xt_idx = encode(mask_state(states, P + t, mask_id), d)       # x_t per x1
+    xt1_idx = encode(mask_state(states, P + t + 1, mask_id), d)  # x_{t+1}
+    xt_toks = decode(xt_idx, d, N)
+    xt1_toks = decode(xt1_idx, d, N)
+    u = np.zeros((S, S, N, d, S))
+    j = P + t  # the single active position (0-indexed)
+    if j < N:
+        for x1 in range(S):
+            z = xt_idx[x1]
+            u[:, x1, j, xt1_toks[x1, j], z] += 1.0
+            u[:, x1, j, xt_toks[x1, j], z] -= 1.0
+    return jnp.asarray(u)
+
+
+def next_token_conditional(q: Array, prefix: np.ndarray, d: int,
+                           N: int) -> np.ndarray:
+    """q(x^j = a | x^{<j} = prefix) for j = len(prefix). What an LM learns."""
+    j = len(prefix)
+    states = enumerate_states(d, N)
+    q_np = np.asarray(q)
+    sel = np.all(states[:, :j] == np.asarray(prefix)[None, :], axis=1)
+    probs = np.zeros(d)
+    for a in range(d):
+        probs[a] = q_np[sel & (states[:, j] == a)].sum()
+    tot = probs.sum()
+    return probs / tot if tot > 0 else np.full(d, 1.0 / d)
+
+
+def ar_marginal_velocity(q: Array, P: int, t: int, d: int, N: int,
+                         mask_id: int) -> Array:
+    """Closed-form marginal velocity (Theorem 1 applied to Eq. 19–22).
+
+    At the active position j = P + t and a reachable state z (prefix of some
+    x1 in supp(q), masks after):  u^j(a, z) = q(x^j = a | z^{<j}) − δ(a = m).
+    Zero elsewhere. Shape (N, d, S).
+    """
+    S = n_states(d, N)
+    states = enumerate_states(d, N)
+    u = np.zeros((N, d, S))
+    j = P + t
+    if j >= N:
+        return jnp.asarray(u)
+    q_np = np.asarray(q)
+    # reachable states at time t: x_t images of supp(q)
+    xt_idx = encode(mask_state(states, j, mask_id), d)
+    reachable = np.unique(xt_idx[q_np > 0])
+    for z in reachable:
+        prefix = states[z, :j]
+        cond = next_token_conditional(q, prefix, d, N)
+        u[j, :, z] += cond
+        u[j, mask_id, z] -= 1.0
+    return jnp.asarray(u)
+
+
+def velocity_from_conditional(cond_probs: Array, z_tok: Array) -> Array:
+    """Production bridge: given a model's next-token distribution
+    ``cond_probs`` (..., d) and the current token value at the active position
+    ``z_tok`` (...,), return the 1-sparse velocity slice u^j(·, z):
+    ``u = cond_probs − onehot(z_tok)`` — move all mass from the current
+    (mask) token to the model's conditional. Used by the ensemble engine."""
+    d = cond_probs.shape[-1]
+    return cond_probs - jnp.eye(d, dtype=cond_probs.dtype)[z_tok]

@@ -1,0 +1,145 @@
+"""Decentralization of the generating velocity (paper §4.3, Eq. 25–27).
+
+The headline theorem: split the target distribution into disjoint clusters
+``S_k``; then the *global* marginal velocity decomposes exactly as
+
+    u_t^i(a, z) = Σ_k  r_k(z, t) · u_t^{i,(k)}(a, z)
+
+where ``u^{(k)}`` is the velocity of the path built from the cluster-
+conditional target ``q(·|S_k)`` (what expert k trains on, independently) and
+the *exact router* is the posterior  ``r_k(z, t) = p_t(z|S_k) p(S_k) / p_t(z)``.
+
+This module computes all three objects exactly on ``[d]^N`` so the theorem is
+machine-checkable (tests/test_decentralize.py), and provides the production
+form used by the serving engine: a router-weighted mixture of expert
+next-token distributions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .autoregressive import ar_marginal_velocity, mask_state
+from .dfm import encode, enumerate_states, n_states
+
+Array = jnp.ndarray
+
+
+@dataclass
+class ClusterSplit:
+    """A partition of the target support into K disjoint clusters.
+
+    ``assignment[x1] = k`` for every state index with q(x1) > 0.
+    """
+
+    q: Array                 # (S,) global target
+    assignment: np.ndarray   # (S,) int cluster ids (arbitrary where q=0)
+    K: int
+
+    def prior(self) -> Array:
+        """p(S_k) = Σ_{x1 ∈ S_k} q(x1)."""
+        q = np.asarray(self.q)
+        return jnp.asarray(np.array(
+            [q[self.assignment == k].sum() for k in range(self.K)]))
+
+    def cluster_target(self, k: int) -> Array:
+        """q(·|S_k) — the distribution expert k is trained on."""
+        q = np.asarray(self.q).copy()
+        q[self.assignment != k] = 0.0
+        tot = q.sum()
+        return jnp.asarray(q / tot if tot > 0 else q)
+
+
+def expert_velocities(split: ClusterSplit, P: int, t: int, d: int, N: int,
+                      mask_id: int) -> Array:
+    """u^{(k)} for every cluster: shape (K, N, d, S). Each is the marginal
+    velocity of the AR path whose target is q(·|S_k) — i.e. what expert k's
+    model represents after training only on its own data."""
+    return jnp.stack([
+        ar_marginal_velocity(split.cluster_target(k), P, t, d, N, mask_id)
+        for k in range(split.K)
+    ])
+
+
+def router_weights(split: ClusterSplit, P: int, t: int, d: int, N: int,
+                   mask_id: int) -> Array:
+    """Exact router r_k(z,t) = p_t(z|S_k) p(S_k) / p_t(z), shape (K, S).
+
+    Under the AR path, p_t(z|S_k) = Σ_{x1 ∈ S_k} q(x1|S_k) 1[x_t(x1) = z],
+    i.e. the cluster-conditional mass of the prefix z. States with
+    p_t(z) = 0 get uniform weights (they are never visited).
+    """
+    S = n_states(d, N)
+    states = enumerate_states(d, N)
+    q = np.asarray(split.q)
+    xt_idx = encode(mask_state(states, P + t, mask_id), d)
+    pz_k = np.zeros((split.K, S))
+    for x1 in range(S):
+        if q[x1] > 0:
+            pz_k[split.assignment[x1], xt_idx[x1]] += q[x1]
+    pz = pz_k.sum(0)
+    safe = np.where(pz > 0, pz, 1.0)
+    r = pz_k / safe[None, :]
+    r[:, pz == 0] = 1.0 / split.K
+    return jnp.asarray(r)
+
+
+def global_velocity_from_experts(expert_u: Array, router: Array) -> Array:
+    """Eq. 27 recomposition: u(a,z) = Σ_k r_k(z) u^{(k)}(a,z).
+
+    expert_u: (K, N, d, S); router: (K, S) → (N, d, S).
+    """
+    return jnp.einsum("knds,ks->nds", expert_u, router)
+
+
+def decomposition_residual(split: ClusterSplit, P: int, t: int, d: int,
+                           N: int, mask_id: int) -> Array:
+    """‖u_global − Σ_k r_k u^{(k)}‖_∞ restricted to reachable states — the
+    quantity the paper proves is exactly zero."""
+    u_global = ar_marginal_velocity(split.q, P, t, d, N, mask_id)
+    u_k = expert_velocities(split, P, t, d, N, mask_id)
+    r = router_weights(split, P, t, d, N, mask_id)
+    recomposed = global_velocity_from_experts(u_k, r)
+    # restrict to reachable states (others are convention-dependent)
+    states = enumerate_states(d, N)
+    q = np.asarray(split.q)
+    xt_idx = encode(mask_state(states, P + t, mask_id), d)
+    reachable = np.unique(xt_idx[q > 0])
+    diff = (u_global - recomposed)[:, :, reachable]
+    return jnp.abs(diff).max()
+
+
+# ---------------------------------------------------------------------------
+# Production form: mixture of expert next-token distributions
+# ---------------------------------------------------------------------------
+
+def mix_expert_distributions(expert_probs: Array, weights: Array) -> Array:
+    """Serving-time recomposition. Because the velocity is affine in the
+    next-token conditional (u = cond − onehot(mask)) and router weights sum
+    to 1, mixing velocities ≡ mixing conditionals:
+
+        Σ_k r_k (c_k − δ_m) = (Σ_k r_k c_k) − δ_m.
+
+    expert_probs: (K, ..., d); weights: (K, ...) broadcastable → (..., d).
+    """
+    w = weights[..., None] if weights.ndim == expert_probs.ndim - 1 else weights
+    return (expert_probs * w).sum(axis=0)
+
+
+def topk_filter_renorm(weights: Array, k: int) -> Array:
+    """Paper §5.2: keep the top-k router weights, renormalize, zero the rest
+    (k=1 in the main experiments ⇒ compute-matched single-expert routing)."""
+    K = weights.shape[0]
+    if k >= K:
+        return weights / weights.sum(axis=0, keepdims=True)
+    kept = weights * _scatter_topk(weights, k)
+    return kept / jnp.maximum(kept.sum(axis=0, keepdims=True), 1e-30)
+
+
+def _scatter_topk(weights: Array, k: int) -> Array:
+    """Top-k mask along axis 0 for batched weights (K, ...)."""
+    ranks = jnp.argsort(jnp.argsort(-weights, axis=0), axis=0)
+    return (ranks < k).astype(weights.dtype)

@@ -1,0 +1,251 @@
+"""Discrete Flow Matching in *discrete time* (paper §3–4.1).
+
+This module is the exact, enumerable form of the theory: everything lives on
+the finite state space ``[d]^N`` (vocab size ``d``, sequence length ``N``),
+so probability paths, velocities, divergences and the Continuity Equation can
+be evaluated *exactly* and machine-checked. The production system (models/,
+train/, serve/) realises the same objects at scale, where ``p_t`` is only
+accessible through a neural network; this module is the ground truth the
+tests and the decentralization theorem are verified against.
+
+Conventions
+-----------
+* States ``x ∈ [d]^N`` are encoded as integers in ``[0, d**N)`` (base-``d``,
+  position 0 = most significant digit). ``enumerate_states`` gives the
+  decoded table.
+* A distribution over states is a vector ``p`` of shape ``(d**N,)``.
+* A coupling ``π(x0, x1)`` is a matrix of shape ``(d**N, d**N)``.
+* A probability generating velocity is an array ``u`` of shape
+  ``(N, d, d**N)`` with ``u[i, a, z] = u_t^i(a, z)`` — the rate of moving
+  position ``i`` of current state ``z`` to token value ``a``.
+
+All math is done in float64 (enable ``jax_enable_x64``) so the theorem
+checks are exact to machine precision.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# State-space enumeration
+# ---------------------------------------------------------------------------
+
+def n_states(d: int, N: int) -> int:
+    return d**N
+
+
+def enumerate_states(d: int, N: int) -> np.ndarray:
+    """All sequences in ``[d]^N`` as an ``(d**N, N)`` int array (base-d order)."""
+    return np.array(list(itertools.product(range(d), repeat=N)), dtype=np.int32)
+
+
+def encode(seqs: np.ndarray, d: int) -> np.ndarray:
+    """Map ``(..., N)`` token sequences to state indices."""
+    N = seqs.shape[-1]
+    weights = d ** np.arange(N - 1, -1, -1)
+    return (seqs * weights).sum(-1)
+
+
+def decode(idx: np.ndarray, d: int, N: int) -> np.ndarray:
+    """Map state indices to ``(..., N)`` token sequences."""
+    idx = np.asarray(idx)
+    out = np.zeros(idx.shape + (N,), dtype=np.int32)
+    rem = idx.copy()
+    for i in range(N - 1, -1, -1):
+        out[..., i] = rem % d
+        rem = rem // d
+    return out
+
+
+def neighbor_table(d: int, N: int) -> np.ndarray:
+    """``nbr[z, i, a]`` = index of the state equal to ``z`` except position
+    ``i`` holds token ``a``. Shape ``(d**N, N, d)``. The Hamming-1 structure
+    underlying the discrete divergence (Eq. 11–12)."""
+    states = enumerate_states(d, N)  # (S, N)
+    S = states.shape[0]
+    nbr = np.zeros((S, N, d), dtype=np.int64)
+    weights = d ** np.arange(N - 1, -1, -1)
+    base = encode(states, d)
+    for i in range(N):
+        # zero out position i then add each candidate token
+        stripped = base - states[:, i] * weights[i]
+        for a in range(d):
+            nbr[:, i, a] = stripped + a * weights[i]
+    return nbr
+
+
+# ---------------------------------------------------------------------------
+# Probability paths (Eq. 1–6)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FactorizedPath:
+    """A conditional-marginal probability path ``p_t(x | x0, x1)`` given as a
+    per-position factorized table, plus the coupling π.
+
+    ``cond[t]`` has shape ``(S0, S1, N, d)`` with
+    ``cond[t][x0, x1, i, a] = p_t(x^i = a | x0, x1)``.
+    """
+
+    d: int
+    N: int
+    pi: Array                      # (S, S) coupling π(x0, x1)
+    cond: list                     # list over t of (S, S, N, d)
+
+    @property
+    def T(self) -> int:
+        return len(self.cond) - 1
+
+    def conditional_joint(self, t: int) -> Array:
+        """``p_t(x | x0, x1)`` over full states: shape (S, S, S)."""
+        S = n_states(self.d, self.N)
+        states = enumerate_states(self.d, self.N)  # (S, N)
+        c = self.cond[t]  # (S, S, N, d)
+        # prod_i c[x0, x1, i, states[x, i]]
+        out = jnp.ones((S, S, S), dtype=c.dtype)
+        for i in range(self.N):
+            out = out * c[:, :, i, states[:, i]][:, :, :]
+        return out
+
+    def marginal(self, t: int) -> Array:
+        """``p_t(x)`` via Eq. 1: marginalize the coupling."""
+        joint = self.conditional_joint(t)  # (S0, S1, S)
+        return jnp.einsum("abx,ab->x", joint, self.pi)
+
+
+def mixture_path(d: int, N: int, pi: Array, schedulers: Array,
+                 w: Array) -> FactorizedPath:
+    """Build the convex-sum path of Eq. 5–6.
+
+    schedulers: (T+1, N, J) with ``schedulers[t, i, j] = κ_t^{i,j}``,
+    rows summing to 1 over j.
+    w: (J, S0, S1, N, d) basis conditionals ``w^j(x^i | x0, x1)``.
+    """
+    cond = []
+    for t in range(schedulers.shape[0]):
+        # (S0,S1,N,d) = sum_j κ[t,i,j] * w[j,:,:,i,:]
+        c = jnp.einsum("ij,jabid->abid", schedulers[t], w)
+        cond.append(c)
+    return FactorizedPath(d=d, N=N, pi=pi, cond=cond)
+
+
+# ---------------------------------------------------------------------------
+# Velocities, divergence, Continuity Equation (Eq. 9–17)
+# ---------------------------------------------------------------------------
+
+def velocity_is_valid(u: Array, p: Array, atol: float = 1e-9) -> bool:
+    """Check Eq. 15–16 on the support of ``p``: columns sum to zero; the
+    diagonal entry (staying) lies in [-1, 0]; off-entries in [0, 1]."""
+    N, d, S = u.shape
+    states = enumerate_states(d, N)
+    col = jnp.abs(u.sum(axis=1)).max()
+    if col > atol:
+        return False
+    support = np.asarray(p) > atol
+    for i in range(N):
+        diag = np.asarray(u[i, states[:, i], np.arange(S)])
+        off = np.asarray(u[i]).copy()
+        off[states[:, i], np.arange(S)] = 0.0
+        if ((diag[support] < -1 - atol).any() or (diag[support] > atol).any()
+                or (off[:, support] < -atol).any()
+                or (off[:, support] > 1 + atol).any()):
+            return False
+    return True
+
+
+def divergence(p: Array, u: Array, nbr: np.ndarray) -> Array:
+    """Discrete divergence ``div_x(p_t u_t)`` of Eq. 12.
+
+    div_x = - Σ_z p(z) Σ_i δ_z(x^ī) u^i(x^i, z).  For fixed i, the states z
+    with δ_z(x^ī)=1 are exactly the Hamming-1 neighbours of x at position i
+    (including z = x itself), i.e. z = nbr[x, i, b] for b ∈ [d].
+    """
+    N, d, S = u.shape
+    div = jnp.zeros((S,), dtype=p.dtype)
+    states = enumerate_states(d, N)
+    for i in range(N):
+        zs = nbr[:, i, :]                    # (S, d): neighbour indices of x at pos i
+        pz = p[zs]                           # (S, d)
+        a_of_x = states[:, i]                # token of x at position i
+        u_vals = u[i, a_of_x[:, None], zs]   # (S, d): u^i(x^i, z)
+        div = div - (pz * u_vals).sum(axis=1)
+    return div
+
+
+def continuity_residual(p_t: Array, p_next: Array, u: Array,
+                        nbr: np.ndarray) -> Array:
+    """Eq. 17 residual: ``p_{t+1}(x) − p_t(x) + div_x(p_t u_t)`` (0 ⇔ holds)."""
+    return p_next - p_t + divergence(p_t, u, nbr)
+
+
+def is_one_sparse(u: Array, p: Array, atol: float = 1e-12) -> bool:
+    """Paper §4.2: at this timestep, u^i ≡ 0 (off-diagonal) for all but at most
+    one position i — *uniformly in z on the support of p* (j = j(t) may depend
+    only on t)."""
+    N, d, S = u.shape
+    states = enumerate_states(d, N)
+    support = np.asarray(p) > atol
+    active = []
+    for i in range(N):
+        off = np.asarray(u[i]).copy()
+        off[states[:, i], np.arange(S)] = 0.0   # remove diagonal (stay) term
+        if np.abs(off[:, support]).max() > atol:
+            active.append(i)
+    return len(active) <= 1
+
+
+def apply_sampling_rule(p: Array, u: Array, nbr: np.ndarray) -> Array:
+    """Exact pushforward of the discrete sampling rule Eq. 13:
+
+    ``X_{t+1}^i ~ δ_{X_t^i}(·) + u^i(·, X_t)`` independently per position.
+    Returns the pmf of ``X_{t+1}``: Σ_z p(z) Π_i (δ_z(x^i) + u^i(x^i, z)).
+    """
+    N, d, S = u.shape
+    states = enumerate_states(d, N)
+    out = jnp.zeros((S,), dtype=p.dtype)
+    # per-position transition kernel K_i[z, a] = δ(a = z^i) + u[i, a, z]
+    kernels = []
+    for i in range(N):
+        K = jnp.asarray(u[i]).T  # (S_z, d)
+        K = K.at[jnp.arange(S), states[:, i]].add(1.0)
+        kernels.append(K)
+    # pushforward: for each z, the product measure over positions
+    for x in range(S):
+        toks = states[x]
+        prob_x = jnp.ones((S,), dtype=p.dtype)
+        for i in range(N):
+            prob_x = prob_x * kernels[i][:, toks[i]]
+        out = out.at[x].set(jnp.vdot(p, prob_x))
+    return out
+
+
+def marginal_velocity(path: FactorizedPath, t: int,
+                      cond_u: Array) -> Array:
+    """Theorem 1 (Eq. 9): marginalize conditional velocities against the
+    posterior ``p_t(z|x0,x1)π(x0,x1)/p_t(z)``.
+
+    cond_u: (S0, S1, N, d, S) with cond_u[x0,x1,i,a,z] = u_t^i(a, z | x0, x1).
+    Returns u of shape (N, d, S).
+    """
+    joint = path.conditional_joint(t)            # (S0, S1, S_z)
+    pz = jnp.einsum("abz,ab->z", joint, path.pi)  # p_t(z)
+    post = joint * path.pi[:, :, None]           # (S0, S1, S_z)
+    safe = jnp.where(pz > 0, pz, 1.0)
+    u = jnp.einsum("abidz,abz->idz", cond_u, post) / safe[None, None, :]
+    return u
+
+
+def chain_marginals(p0: Array, us: list, nbr: np.ndarray) -> list:
+    """Roll the sampling rule forward: returns [p_0, p_1, ..., p_T]."""
+    ps = [p0]
+    for u in us:
+        ps.append(apply_sampling_rule(ps[-1], u, nbr))
+    return ps

@@ -1,0 +1,69 @@
+"""Expert-ensemble inference (paper §5.2).
+
+At each decode step the global generating velocity is the router-weighted
+sum of expert velocities (Eq. 27). Because every expert velocity is affine
+in its next-token conditional (u_k = c_k − δ_mask) and the router weights
+sum to one, mixing velocities is *identical* to mixing the experts'
+next-token probability distributions:
+
+    p_mix(a | prefix) = Σ_k r_k(features) · softmax(logits_k)[a]
+
+with r the top-k-filtered Eq. 28 router. With top-1 routing this degenerates
+to "run only the selected expert" — the compute-matched setting of the
+paper's main tables; the engine exploits that by gathering the single
+selected expert's parameters instead of running all K.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decentralize import mix_expert_distributions
+from .router import CentroidRouter
+
+Array = jnp.ndarray
+
+
+def mix_expert_logits(expert_logits: Array, weights: Array,
+                      *, log_space: bool = False) -> Array:
+    """Combine expert next-token logits into ensemble probabilities.
+
+    expert_logits: (K, ..., V); weights: (..., K) (already top-k filtered,
+    rows summing to 1). Returns probabilities (..., V) — the exact Eq. 27
+    recomposition (probability space, not logit averaging).
+    """
+    probs = jax.nn.softmax(expert_logits, axis=-1)          # (K, ..., V)
+    w = jnp.moveaxis(weights, -1, 0)                        # (K, ...)
+    mixed = mix_expert_distributions(probs, w)
+    if log_space:
+        return jnp.log(jnp.maximum(mixed, 1e-30))
+    return mixed
+
+
+@dataclass
+class EnsembleSpec:
+    """Static description of a decentralized ensemble."""
+
+    n_experts: int
+    top_k: int = 1
+    temperature: float = 10.0
+
+
+def ensemble_next_token_probs(router: CentroidRouter, features: Array,
+                              expert_logits: Array) -> Array:
+    """features: (B, D) routing features for each request; expert_logits:
+    (K, B, V) per-expert next-token logits → (B, V) mixed probabilities."""
+    weights = router.route(features)                        # (B, K)
+    return mix_expert_logits(expert_logits, weights)
+
+
+def select_expert_params(stacked_params, expert_idx: Array):
+    """Top-1 fast path: gather one expert's parameter slice out of a pytree
+    whose leaves carry a leading K dim. With the expert axis sharded over the
+    ``pod`` mesh axis this lowers to a cross-pod gather of exactly one
+    expert — the serving analogue of zero-communication training."""
+    return jax.tree.map(lambda leaf: jnp.take(leaf, expert_idx, axis=0),
+                        stacked_params)

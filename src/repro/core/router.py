@@ -1,0 +1,79 @@
+"""The parameter-free centroid router (paper §5.1–5.2, Eq. 28).
+
+Routing weight for expert k given an input with (frozen-encoder) feature x:
+
+    p(S_k | x) = softmax_k( τ · cos(x, c_k) )
+
+followed by top-k filtering + renormalization (k = 1 in the paper's main
+experiments, making ensemble inference compute-matched with the dense
+baseline). Routing is time-independent and agnostic of the token state —
+exactly Eq. 28.
+
+The fused normalize→matmul→softmax→top-k computation has a Pallas TPU kernel
+(repro/kernels/router_scores.py); this module is the public JAX API and
+falls back to pure jnp when the kernel is disabled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .clustering import l2_normalize
+from .decentralize import topk_filter_renorm
+
+Array = jnp.ndarray
+
+
+@dataclass(frozen=True)
+class RouterConfig:
+    temperature: float = 10.0
+    top_k: int = 1
+    use_kernel: bool = False   # route through the Pallas kernel
+
+
+@dataclass
+class CentroidRouter:
+    """Holds the K unit-norm centroids from balanced spherical k-means."""
+
+    centroids: Array           # (K, D)
+    config: RouterConfig = field(default_factory=RouterConfig)
+
+    @property
+    def K(self) -> int:
+        return self.centroids.shape[0]
+
+    def cluster_probs(self, features: Array) -> Array:
+        """Eq. 28. features: (..., D) → (..., K)."""
+        if self.config.use_kernel:
+            from repro.kernels import ops as kops
+            flat = features.reshape(-1, features.shape[-1])
+            out = kops.router_scores(flat, self.centroids,
+                                     self.config.temperature)
+            return out.reshape(features.shape[:-1] + (self.K,))
+        x = l2_normalize(features)
+        c = l2_normalize(self.centroids)
+        sims = x @ c.T
+        return jax.nn.softmax(self.config.temperature * sims, axis=-1)
+
+    def route(self, features: Array) -> Array:
+        """Top-k filtered + renormalized weights: (..., K)."""
+        probs = self.cluster_probs(features)
+        moved = jnp.moveaxis(probs, -1, 0)             # (K, ...)
+        filtered = topk_filter_renorm(moved, self.config.top_k)
+        return jnp.moveaxis(filtered, 0, -1)
+
+    def top1(self, features: Array) -> Array:
+        """Hard assignment (training-time partitioning mirror)."""
+        return jnp.argmax(self.cluster_probs(features), axis=-1)
+
+
+def router_from_clustering(centroids: np.ndarray,
+                           config: Optional[RouterConfig] = None) -> CentroidRouter:
+    """Build the router directly from k-means output — zero extra trainable
+    parameters, 'perfectly mirrors the initial data distribution strategy'."""
+    return CentroidRouter(centroids=jnp.asarray(centroids, dtype=jnp.float32),
+                          config=config or RouterConfig())

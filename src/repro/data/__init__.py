@@ -1,0 +1,3 @@
+from .partition import Partition, partition_dataset
+from .pipeline import LoaderConfig, ShardLoader, expert_loaders
+from .synthetic import SyntheticConfig, SyntheticMultimodal

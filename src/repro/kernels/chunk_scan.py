@@ -1,0 +1,76 @@
+"""Intra-chunk linear-attention kernel (Pallas) — the MXU-heavy inner part
+of the chunkwise mLSTM / Mamba2-SSD scan (repro/models/ssm.py). Computes,
+per (batch, chunk, head):
+
+    intra[t]  = Σ_{s≤t} exp(cum_t − cum_s) · (q_t·k_s) · v_s      (L×L matmuls)
+    chunk_kv  = Σ_s exp(cum_L − cum_s) · k_s v_sᵀ                 (dk×dv matmul)
+
+The O(S)-state inter-chunk carry stays a lax.scan in the caller (it is a
+latency chain, not a throughput problem). Grid = (B, NC, H); one chunk of
+one head per step: L×dk, L×dv tiles in VMEM (L = 256 → all MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _chunk_kernel(q_ref, k_ref, v_ref, cum_ref, intra_ref, kv_ref, *,
+                  chunk: int):
+    q = q_ref[0, 0, :, 0, :].astype(jnp.float32)       # (L, dk)
+    k = k_ref[0, 0, :, 0, :].astype(jnp.float32)       # (L, dk)
+    v = v_ref[0, 0, :, 0, :].astype(jnp.float32)       # (L, dv)
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)      # (L,)
+
+    # decay matrix D[t, s] = exp(cum_t − cum_s) on the lower triangle
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = cum[:, None] - cum[None, :]
+    D = jnp.exp(jnp.where(rows >= cols, decay, -jnp.inf))
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    intra = jax.lax.dot_general(scores * D, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    intra_ref[0, 0, :, 0, :] = intra
+
+    total = cum[-1]
+    k_dec = k * jnp.exp(total - cum)[:, None]
+    kv = jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    kv_ref[0, 0, 0, :, :] = kv
+
+
+def chunk_scan(qc: Array, kc: Array, vc: Array,
+               cum: Array, *, interpret: bool = False
+               ) -> Tuple[Array, Array]:
+    """qc,kc: (B,NC,L,H,dk); vc: (B,NC,L,H,dv); cum: (B,NC,L,H) f32.
+    Returns (intra (B,NC,L,H,dv) f32, chunk_kv (B,NC,H,dk,dv) f32)."""
+    B, NC, L, H, dk = qc.shape
+    dv = vc.shape[-1]
+    kernel = functools.partial(_chunk_kernel, chunk=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, NC, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, dk), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, L, 1, dk), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, L, 1, dv), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, c, h: (b, c, 0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, 1, dv), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, dk, dv), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, NC, L, H, dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, NC, H, dk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qc, kc, vc, cum.astype(jnp.float32))

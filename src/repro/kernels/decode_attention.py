@@ -1,0 +1,103 @@
+"""Single-token GQA decode attention (Pallas): one query vector per head
+attends over the KV cache in blocks, online-softmax carried in scratch.
+
+Grid = (batch, kv_heads, kv_blocks). All ``group = H/KV`` query heads that
+share a KV head are processed together as a (group, dh) tile — the natural
+GQA layout on the MXU (the group dim rides the sublane axis). Position
+masking (including the ring-buffer validity rule for sliding-window caches)
+is computed from a prefetched per-batch position scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, window: int, s_cache: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)          # (group, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dv)
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    idx = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if window > 0:
+        valid = (idx <= pos) | (pos >= s_cache)        # ring buffer
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0, :, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: Array, k: Array, v: Array, pos: Array, *,
+                     window: int = 0, block_k: int = 256,
+                     interpret: bool = False) -> Array:
+    """q: (B,H,dh); k,v: (B,S,KV,dh); pos: (B,) int32 → (B,H,dh)."""
+    B, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    group = H // KV
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    scale = 1.0 / (dh ** 0.5)
+    # regroup query heads by their KV head: (B, KV, group, dh)
+    qg = q.reshape(B, KV, group, dh)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               window=window, s_cache=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,)),            # pos
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b, h, ki: (b, h, 0, 0)),          # q
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda b, h, ki: (b, ki, h, 0)),         # k
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda b, h, ki: (b, ki, h, 0)),         # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, dh)

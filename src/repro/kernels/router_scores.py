@@ -1,0 +1,57 @@
+"""Fused centroid-router kernel (Pallas): L2-normalize features and
+centroids → cosine similarity matmul → temperature softmax (Eq. 28).
+
+This sits on the critical path of every serving request (the paper's
+"routing incurs almost zero overhead" claim assumes it is fused with the
+frontend). Grid = (feature_blocks,); the full centroid matrix (K ≤ a few
+hundred, D ≤ a few K) lives in VMEM; the feature block rides the MXU with
+the lane dim = D padded to 128 by the caller (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jnp.ndarray
+
+
+def _router_kernel(x_ref, c_ref, o_ref, *, temperature: float):
+    x = x_ref[...].astype(jnp.float32)                 # (bb, D)
+    c = c_ref[...].astype(jnp.float32)                 # (K, D)
+    xn = x * jax.lax.rsqrt(jnp.maximum((x * x).sum(-1, keepdims=True), 1e-24))
+    cn = c * jax.lax.rsqrt(jnp.maximum((c * c).sum(-1, keepdims=True), 1e-24))
+    sims = jax.lax.dot_general(xn, cn, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    z = temperature * sims
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    o_ref[...] = (e / e.sum(-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def router_scores(x: Array, centroids: Array, temperature: float, *,
+                  block_b: int = 256, interpret: bool = False) -> Array:
+    """x: (B, D); centroids: (K, D) → routing probabilities (B, K)."""
+    B, D = x.shape
+    K = centroids.shape[0]
+    block_b = min(block_b, B)
+    pad_b = (-B) % block_b
+    if pad_b:
+        x = jnp.pad(x, [(0, pad_b), (0, 0)], constant_values=1.0)
+    nb = (B + pad_b) // block_b
+
+    kernel = functools.partial(_router_kernel, temperature=temperature)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((K, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B + pad_b, K), x.dtype),
+        interpret=interpret,
+    )(x, centroids)
+    return out[:B]

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod : v5e-256 as (16, 16) over ("data", "model").
+Multi-pod  : 2 pods = 512 chips as (2, 16, 16) over ("pod", "data", "model").
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; everything else
+sees the single real CPU device).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def pod_of_device(device_id: int, *, multi_pod: bool) -> int:
+    """Device-id → pod index under the mesh layouts above (pod-major)."""
+    return device_id // 256 if multi_pod else 0

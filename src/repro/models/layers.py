@@ -1,0 +1,106 @@
+"""Shared neural building blocks (pure JAX, no flax): norms, RoPE, SwiGLU,
+embeddings. Parameter shapes/shardings come from ParamSpec descriptors."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import ParamSpec
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def swiglu_specs(d_model: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), "scaled"),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp"), "scaled"),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed"), "scaled"),
+    }
+
+
+def swiglu(params: Dict[str, Array], x: Array) -> Array:
+    dt = x.dtype
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    up = x @ params["w_up"].astype(dt)
+    return (gate * up) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_specs(vocab: int, d_model: int, tie: bool) -> Dict[str, ParamSpec]:
+    specs = {"embedding": ParamSpec((vocab, d_model), ("vocab", "embed"))}
+    if not tie:
+        specs["unembed"] = ParamSpec((d_model, vocab), ("embed", "vocab"),
+                                     "scaled")
+    return specs
+
+
+def embed(params: Dict[str, Array], tokens: Array, dtype) -> Array:
+    return jnp.take(params["embedding"], tokens, axis=0).astype(dtype)
+
+
+def unembed(params: Dict[str, Array], x: Array, tie: bool,
+            true_vocab: int = 0) -> Array:
+    if tie:
+        w = params["embedding"].T
+    else:
+        w = params["unembed"]
+    # logits in float32 for a stable softmax/loss
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    V = logits.shape[-1]
+    if true_vocab and true_vocab < V:      # mask padded vocab rows
+        pad_mask = jnp.arange(V) >= true_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def cross_entropy_loss(logits: Array, labels: Array,
+                       mask: Optional[Array] = None) -> Array:
+    """Mean next-token NLL. logits: (B, S, V) f32; labels: (B, S) int."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

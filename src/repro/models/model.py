@@ -1,0 +1,558 @@
+"""Unified model assembly for every assigned architecture family.
+
+One ``Model`` object per ModelConfig exposes:
+
+* ``param_specs()`` — ParamSpec pytree (single source for init/sharding/dry-run)
+* ``init(key)`` — materialized parameters
+* ``forward(params, batch)`` — teacher-forced logits (training/eval)
+* ``loss(params, batch)`` — next-token CE with masking (VLM/audio aware)
+* ``prefill(params, batch)`` — full-sequence forward that also builds the
+  decode state (KV caches / recurrent states), right-sized to ``cache_len``
+* ``decode_step(params, cache, tokens, pos)`` — ONE new token (serve_step)
+* ``init_cache`` / ``cache_shapes`` — zeros or ShapeDtypeStructs (dry-run)
+
+Layer stacks are ``jax.lax.scan``-ed over stacked parameters (compile time
+independent of depth — essential for the 126-layer 405B dry-run) with an
+optional remat policy. Heterogeneous stacks (xLSTM's periodic sLSTM, Zamba2's
+periodically-applied *shared* attention block) scan over homogeneous groups.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (cross_entropy_loss, embed, embedding_specs, rms_norm,
+                     swiglu, swiglu_specs, unembed)
+from .params import ParamSpec, init_params, is_spec
+
+Array = jnp.ndarray
+
+
+def stack_specs(tree, n: int):
+    """Prepend a scanned layer dim to every ParamSpec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layer",) + s.logical,
+                            s.init, s.scale),
+        tree, is_leaf=is_spec)
+
+
+def _norm_spec(d):
+    return ParamSpec((d,), (None,), "ones")
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def scan_layers(body, carry, xs, cfg: ModelConfig):
+    """``jax.lax.scan`` over a stacked layer dim — or, when ``cfg.unroll``
+    is set (dry-run depth probes), an unrolled python loop producing
+    straight-line HLO with identical semantics."""
+    if not cfg.unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        layer = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, layer)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # Parameter specs
+    # ------------------------------------------------------------------
+
+    def _block_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        D = cfg.d_model
+        if cfg.family in ("dense", "vlm"):
+            return {"ln1": _norm_spec(D), "attn": attn.attention_specs(cfg),
+                    "ln2": _norm_spec(D), "ffn": swiglu_specs(D, cfg.d_ff)}
+        if cfg.family == "moe":
+            return {"ln1": _norm_spec(D), "attn": attn.attention_specs(cfg),
+                    "ln2": _norm_spec(D), "moe": moe_lib.moe_specs(cfg)}
+        if cfg.family == "audio":      # decoder block
+            return {"ln1": _norm_spec(D), "self_attn": attn.attention_specs(cfg),
+                    "ln2": _norm_spec(D), "cross_attn": attn.attention_specs(cfg),
+                    "ln3": _norm_spec(D), "ffn": swiglu_specs(D, cfg.d_ff)}
+        if cfg.family == "ssm":        # xLSTM group: (k−1) mLSTM + 1 sLSTM
+            gm = self.group_m
+            return {
+                "m_ln": stack_specs(_norm_spec(D), gm),
+                "mlstm": stack_specs(ssm_lib.mlstm_specs(cfg), gm),
+                "s_ln": _norm_spec(D),
+                "slstm": ssm_lib.slstm_specs(cfg),
+            }
+        if cfg.family == "hybrid":     # Zamba2 group: k Mamba2 (+ shared attn)
+            gm = self.group_m
+            return {
+                "m_ln": stack_specs(_norm_spec(D), gm),
+                "mamba": stack_specs(ssm_lib.mamba2_specs(cfg), gm),
+            }
+        raise ValueError(cfg.family)
+
+    @cached_property
+    def group_m(self) -> int:
+        """Homogeneous sub-layers per scanned group (ssm/hybrid)."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            k = cfg.ssm.slstm_every or cfg.n_layers
+            return max(k - 1, 1)
+        if cfg.family == "hybrid":
+            return cfg.ssm.shared_attn_every or cfg.n_layers
+        return 1
+
+    @cached_property
+    def n_groups(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return cfg.n_layers // (self.group_m + 1)
+        if cfg.family == "hybrid":
+            return cfg.n_layers // self.group_m
+        return cfg.n_layers
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        D = cfg.d_model
+        specs: Dict[str, Any] = {
+            "embed": embedding_specs(cfg.padded_vocab, D, cfg.tie_embeddings),
+            "blocks": stack_specs(self._block_specs(), self.n_groups),
+            "final_norm": _norm_spec(D),
+        }
+        if cfg.family == "vlm":
+            specs["projector"] = {
+                "w1": ParamSpec((cfg.vision_dim, D), ("vision", "embed"), "scaled"),
+                "w2": ParamSpec((D, D), ("embed", None), "scaled"),
+            }
+        if cfg.family == "audio":
+            enc_block = {"ln1": _norm_spec(D), "attn": attn.attention_specs(cfg),
+                         "ln2": _norm_spec(D), "ffn": swiglu_specs(D, cfg.d_ff)}
+            specs["encoder"] = {
+                "in_proj": ParamSpec((cfg.audio_dim, D), ("audio", "embed"), "scaled"),
+                "blocks": stack_specs(enc_block, cfg.n_enc_layers),
+                "norm": _norm_spec(D),
+            }
+        if cfg.family == "hybrid":
+            specs["shared_attn"] = {
+                "ln1": _norm_spec(D), "attn": attn.attention_specs(cfg),
+                "ln2": _norm_spec(D), "ffn": swiglu_specs(D, cfg.d_ff),
+            }
+        return specs
+
+    def init(self, key, dtype=None):
+        return init_params(key, self.param_specs(),
+                           dtype or self.cfg.pdtype)
+
+    # ------------------------------------------------------------------
+    # Input embedding (modality frontends are stubs per DESIGN.md)
+    # ------------------------------------------------------------------
+
+    def _embed_inputs(self, params, batch) -> Array:
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], cfg.cdtype)
+        if cfg.family == "vlm":
+            p = params["projector"]
+            patches = batch["patches"].astype(cfg.cdtype)     # (B, Np, Dv)
+            proj = jax.nn.gelu(patches @ p["w1"].astype(cfg.cdtype))
+            proj = proj @ p["w2"].astype(cfg.cdtype)
+            x = jnp.concatenate([proj, x], axis=1)            # image prefix
+        return x
+
+    def _encode_audio(self, params, frames: Array) -> Array:
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = frames.astype(cfg.cdtype) @ enc["in_proj"].astype(cfg.cdtype)
+
+        def body(h, layer):
+            h = h + attn.full_attention(layer["attn"],
+                                        rms_norm(h, layer["ln1"], cfg.norm_eps),
+                                        cfg, causal=False)
+            h = h + swiglu(layer["ffn"], rms_norm(h, layer["ln2"], cfg.norm_eps))
+            return h, None
+
+        x, _ = scan_layers(_maybe_remat(body, cfg), x, enc["blocks"], cfg)
+        return rms_norm(x, enc["norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------
+    # Teacher-forced forward (train / eval)
+    # ------------------------------------------------------------------
+
+    def forward(self, params, batch, *, use_kernel: bool = False) -> Array:
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        enc_out = None
+        if cfg.family == "audio":
+            enc_out = self._encode_audio(params, batch["frames"])
+
+        block = self._train_block(use_kernel, enc_out,
+                                  params.get("shared_attn"))
+        x, _ = scan_layers(_maybe_remat(block, cfg), x, params["blocks"], cfg)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
+
+    def _train_block(self, use_kernel: bool, enc_out: Optional[Array],
+                     shared=None):
+        cfg = self.cfg
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(x, layer):
+                h = x + attn.full_attention(
+                    layer["attn"], rms_norm(x, layer["ln1"], cfg.norm_eps),
+                    cfg, causal=True, use_kernel=use_kernel)
+                y = rms_norm(h, layer["ln2"], cfg.norm_eps)
+                if cfg.family == "moe":
+                    return h + moe_lib.moe_ffn(layer["moe"], y, cfg), None
+                return h + swiglu(layer["ffn"], y), None
+            return body
+
+        if cfg.family == "audio":
+            def body(x, layer):
+                h = x + attn.full_attention(
+                    layer["self_attn"], rms_norm(x, layer["ln1"], cfg.norm_eps),
+                    cfg, causal=True, use_kernel=use_kernel)
+                kv = attn.encode_kv(layer["cross_attn"], enc_out, cfg)
+                h = h + attn.cross_attention(
+                    layer["cross_attn"], rms_norm(h, layer["ln2"], cfg.norm_eps),
+                    kv, cfg)
+                return h + swiglu(layer["ffn"],
+                                  rms_norm(h, layer["ln3"], cfg.norm_eps)), None
+            return body
+
+        if cfg.family == "ssm":
+            def body(x, group):
+                def m_body(h, m):
+                    return h + ssm_lib.mlstm_block(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg,
+                        use_kernel=use_kernel), None
+                x, _ = scan_layers(
+                    m_body, x, {"ln": group["m_ln"], "core": group["mlstm"]}, cfg)
+                y, _ = ssm_lib.slstm_scan(
+                    group["slstm"], rms_norm(x, group["s_ln"], cfg.norm_eps), cfg)
+                return x + y, None
+            return body
+
+        if cfg.family == "hybrid":
+            def body(x, group):
+                def m_body(h, m):
+                    return h + ssm_lib.mamba2_block(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg,
+                        use_kernel=use_kernel), None
+                x, _ = scan_layers(
+                    m_body, x, {"ln": group["m_ln"], "core": group["mamba"]}, cfg)
+                h = x + attn.full_attention(
+                    shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+                    cfg, causal=True, use_kernel=use_kernel)
+                return h + swiglu(shared["ffn"],
+                                  rms_norm(h, shared["ln2"], cfg.norm_eps)), None
+            return body
+
+        raise ValueError(cfg.family)
+
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        cfg = self.cfg
+        logits = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm":     # image prefix carries no LM loss
+            Np = cfg.n_patches
+            logits = logits[:, Np:]
+        mask = batch.get("loss_mask")
+        l = cross_entropy_loss(logits[:, :-1], labels[:, 1:],
+                               None if mask is None else mask[:, 1:])
+        return l, {"loss": l}
+
+    # ------------------------------------------------------------------
+    # Decode state (KV caches / recurrent states)
+    # ------------------------------------------------------------------
+
+    def _cache_struct(self, batch: int, cache_len: int, as_shape: bool):
+        """Pytree of zeros (as_shape=False) or ShapeDtypeStructs."""
+        cfg = self.cfg
+        dt = cfg.cdtype
+        L, KV, dh = self.n_groups, cfg.n_kv_heads, cfg.head_dim
+        win = cfg.sliding_window
+        S_kv = min(cache_len, win) if win > 0 else cache_len
+        mk = (lambda s, d=dt: jax.ShapeDtypeStruct(s, d)) if as_shape \
+            else (lambda s, d=dt: jnp.zeros(s, d))
+        if cfg.family in ("dense", "vlm", "moe"):
+            kv = (L, batch, S_kv, KV, dh)
+            return {"k": mk(kv), "v": mk(kv)}
+        if cfg.family == "audio":
+            kv = (L, batch, S_kv, KV, dh)
+            xkv = (L, batch, cfg.n_audio_frames, KV, dh)
+            return {"k": mk(kv), "v": mk(kv),
+                    "xk": mk(xkv), "xv": mk(xkv)}
+        if cfg.family == "ssm":
+            G, gm = self.n_groups, self.group_m
+            m_shape = (G, gm) + ssm_lib.mlstm_state_shape(cfg, batch)
+            s_shapes = ssm_lib.slstm_state_shapes(cfg, batch)
+            return {"mlstm": mk(m_shape, jnp.float32),
+                    "slstm": tuple(mk((G,) + s, jnp.float32)
+                                   for s in s_shapes)}
+        if cfg.family == "hybrid":
+            G, gm = self.n_groups, self.group_m
+            ssm_s, conv_s = ssm_lib.mamba2_state_shapes(cfg, batch)
+            kv = (G, batch, S_kv, KV, dh)
+            return {"ssm": mk((G, gm) + ssm_s, jnp.float32),
+                    "conv": mk((G, gm) + conv_s),
+                    "k": mk(kv), "v": mk(kv)}
+        raise ValueError(cfg.family)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return self._cache_struct(batch, cache_len, as_shape=False)
+
+    def cache_shapes(self, batch: int, cache_len: int):
+        return self._cache_struct(batch, cache_len, as_shape=True)
+
+    # ------------------------------------------------------------------
+    # Prefill: full sequence forward + decode state construction
+    # ------------------------------------------------------------------
+
+    def prefill(self, params, batch, cache_len: int, *,
+                use_kernel: bool = False):
+        """Returns (logits (B,S,V), cache). For windowed configs the cache
+        holds the last ``window`` positions (ring layout, slot = pos % win)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        win = cfg.sliding_window
+        S_kv = min(cache_len, win) if win > 0 else cache_len
+
+        def pad_kv(k):
+            """(B,S,KV,dh) → ring/right-padded (B,S_kv,KV,dh)."""
+            if win > 0 and S >= S_kv:
+                tail = k[:, S - S_kv:]
+                # ring layout: slot = pos % S_kv
+                start = (S - S_kv) % S_kv
+                return jnp.roll(tail, start, axis=1)
+            return jnp.pad(k, [(0, 0), (0, S_kv - S), (0, 0), (0, 0)])
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(x, layer):
+                h_in = rms_norm(x, layer["ln1"], cfg.norm_eps)
+                a, (k, v) = attn.prefill_attention(layer["attn"], h_in, cfg, S,
+                                                   use_kernel=use_kernel)
+                h = x + a
+                y = rms_norm(h, layer["ln2"], cfg.norm_eps)
+                out = h + (moe_lib.moe_ffn(layer["moe"], y, cfg)
+                           if cfg.family == "moe" else swiglu(layer["ffn"], y))
+                return out, (pad_kv(k[:, :S]), pad_kv(v[:, :S]))
+            x, (ks, vs) = scan_layers(body, x, params["blocks"], cfg)
+            cache = {"k": ks, "v": vs}
+
+        elif cfg.family == "audio":
+            enc_out = self._encode_audio(params, batch["frames"])
+
+            def body(x, layer):
+                h_in = rms_norm(x, layer["ln1"], cfg.norm_eps)
+                a, (k, v) = attn.prefill_attention(layer["self_attn"], h_in,
+                                                   cfg, S, use_kernel=use_kernel)
+                h = x + a
+                xkv = attn.encode_kv(layer["cross_attn"], enc_out, cfg)
+                h = h + attn.cross_attention(
+                    layer["cross_attn"], rms_norm(h, layer["ln2"], cfg.norm_eps),
+                    xkv, cfg)
+                out = h + swiglu(layer["ffn"],
+                                 rms_norm(h, layer["ln3"], cfg.norm_eps))
+                return out, (pad_kv(k[:, :S]), pad_kv(v[:, :S]),
+                             xkv[0], xkv[1])
+            x, (ks, vs, xks, xvs) = scan_layers(body, x, params["blocks"], cfg)
+            cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+        elif cfg.family == "ssm":
+            def body(x, group):
+                def m_body(h, m):
+                    q, k, v, log_f, z = ssm_lib._mlstm_qkvg(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg)
+                    v_ext = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)
+                    y, st = ssm_lib.chunked_linear_attention(
+                        q, k, v_ext, log_f, cfg.ssm.chunk,
+                        use_kernel=use_kernel)
+                    num, den = y[..., :-1], y[..., -1:]
+                    hh = (num / (jnp.abs(den) + 1.0)).reshape(B, S, -1)
+                    hh = rms_norm(hh, m["core"]["norm"], cfg.norm_eps) \
+                        * jax.nn.silu(z)
+                    return h + hh @ m["core"]["w_out"].astype(h.dtype), st
+                x, m_states = scan_layers(
+                    m_body, x, {"ln": group["m_ln"], "core": group["mlstm"]}, cfg)
+                y, s_state = ssm_lib.slstm_scan(
+                    group["slstm"], rms_norm(x, group["s_ln"], cfg.norm_eps), cfg)
+                return x + y, (m_states, s_state)
+            x, (m_states, s_states) = scan_layers(body, x, params["blocks"], cfg)
+            cache = {"mlstm": m_states, "slstm": s_states}
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(x, group):
+                def m_body(h, m):
+                    y, st = self._mamba2_prefill(m["core"],
+                                                 rms_norm(h, m["ln"],
+                                                          cfg.norm_eps),
+                                                 use_kernel)
+                    return h + y, st
+                x, m_states = scan_layers(
+                    m_body, x, {"ln": group["m_ln"], "core": group["mamba"]}, cfg)
+                h_in = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                a, (k, v) = attn.prefill_attention(shared["attn"], h_in, cfg, S,
+                                                   use_kernel=use_kernel)
+                h = x + a
+                out = h + swiglu(shared["ffn"],
+                                 rms_norm(h, shared["ln2"], cfg.norm_eps))
+                return out, (m_states, pad_kv(k[:, :S]), pad_kv(v[:, :S]))
+            x, (m_states, ks, vs) = scan_layers(body, x, params["blocks"], cfg)
+            cache = {"ssm": m_states[0], "conv": m_states[1],
+                     "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
+        return logits, cache
+
+    def _mamba2_prefill(self, p, x, use_kernel):
+        """mamba2_block that also returns (ssm_state, conv_carry)."""
+        cfg = self.cfg
+        xs, z, Bm, Cm, dt_raw, (B, S, Di, N, H, P) = \
+            ssm_lib._mamba2_inner(p, x, cfg)
+        conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+        conv_out, conv_carry = ssm_lib._causal_conv(
+            conv_in, p["conv_w"].astype(x.dtype))
+        W = p["conv_w"].shape[0]
+        conv_carry = conv_in[:, -(W - 1):] if W > 1 else conv_carry
+        xs, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                             p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        log_g = dt * A[None, None, :]
+        q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+        k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N)) * \
+            dt[..., None].astype(x.dtype)
+        v = xs.reshape(B, S, H, P)
+        y, st = ssm_lib.chunked_linear_attention(q, k, v, log_g, cfg.ssm.chunk,
+                                                 use_kernel=use_kernel)
+        y = y + p["D_skip"].astype(x.dtype)[None, None, :, None] * v
+        y = y.reshape(B, S, Di) * jax.nn.silu(z)
+        y = rms_norm(y, p["norm"], cfg.norm_eps)
+        return y @ p["w_out"].astype(x.dtype), (st, conv_carry)
+
+    # ------------------------------------------------------------------
+    # Decode: ONE new token (serve_step body)
+    # ------------------------------------------------------------------
+
+    def decode_step(self, params, cache, tokens: Array, pos: Array, *,
+                    use_kernel: bool = False):
+        """tokens: (B,) int32; pos: () int32 current position. Returns
+        (logits (B, V), new cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None], cfg.cdtype)  # (B,1,D)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(x, layer_and_cache):
+                layer, (k, v) = layer_and_cache
+                a, kv = attn.decode_attention(
+                    layer["attn"], rms_norm(x, layer["ln1"], cfg.norm_eps),
+                    cfg, (k, v), pos, use_kernel=use_kernel)
+                h = x + a
+                y = rms_norm(h, layer["ln2"], cfg.norm_eps)
+                out = h + (moe_lib.moe_ffn(layer["moe"], y, cfg)
+                           if cfg.family == "moe" else swiglu(layer["ffn"], y))
+                return out, kv
+            x, (ks, vs) = scan_layers(
+                body, x, (params["blocks"], (cache["k"], cache["v"])), cfg)
+            new_cache = {"k": ks, "v": vs}
+
+        elif cfg.family == "audio":
+            def body(x, layer_and_cache):
+                layer, (k, v, xk, xv) = layer_and_cache
+                a, kv = attn.decode_attention(
+                    layer["self_attn"], rms_norm(x, layer["ln1"], cfg.norm_eps),
+                    cfg, (k, v), pos, use_kernel=use_kernel)
+                h = x + a
+                h = h + attn.cross_attention(
+                    layer["cross_attn"], rms_norm(h, layer["ln2"], cfg.norm_eps),
+                    (xk, xv), cfg)
+                out = h + swiglu(layer["ffn"],
+                                 rms_norm(h, layer["ln3"], cfg.norm_eps))
+                return out, kv + (xk, xv)
+            x, (ks, vs, xks, xvs) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["k"], cache["v"], cache["xk"], cache["xv"])), cfg)
+            new_cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+        elif cfg.family == "ssm":
+            def body(x, group_and_cache):
+                group, (m_st, s_st) = group_and_cache
+                def m_body(h, mc):
+                    m, st = mc
+                    y, st = ssm_lib.mlstm_step(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg, st)
+                    return h + y, st
+                x, m_st = scan_layers(
+                    m_body, x,
+                    (({"ln": group["m_ln"], "core": group["mlstm"]}), m_st), cfg)
+                y, s_st = ssm_lib.slstm_scan(
+                    group["slstm"], rms_norm(x, group["s_ln"], cfg.norm_eps),
+                    cfg, state=s_st)
+                return x + y, (m_st, s_st)
+            x, (m_states, s_states) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["mlstm"], cache["slstm"])), cfg)
+            new_cache = {"mlstm": m_states, "slstm": s_states}
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(x, group_and_cache):
+                group, (ssm_st, conv_st, k, v) = group_and_cache
+                def m_body(h, mc):
+                    m, st = mc
+                    y, st = ssm_lib.mamba2_step(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg, st)
+                    return h + y, st
+                x, (ssm_st, conv_st) = scan_layers(
+                    m_body, x, ({"ln": group["m_ln"], "core": group["mamba"]},
+                                (ssm_st, conv_st)), cfg)
+                a, kv = attn.decode_attention(
+                    shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+                    cfg, (k, v), pos, use_kernel=use_kernel)
+                h = x + a
+                out = h + swiglu(shared["ffn"],
+                                 rms_norm(h, shared["ln2"], cfg.norm_eps))
+                return out, (ssm_st, conv_st) + kv
+            x, (ssm_s, conv_s, ks, vs) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["ssm"], cache["conv"],
+                           cache["k"], cache["v"])), cfg)
+            new_cache = {"ssm": ssm_s, "conv": conv_s, "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
+        return logits[:, 0], new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    m = Model(cfg)
+    return m

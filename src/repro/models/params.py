@@ -1,0 +1,130 @@
+"""Parameter descriptor system: one source of truth for shapes, initializers
+and *logical sharding axes* (MaxText-style logical-axis rules).
+
+A model definition builds a pytree of ``ParamSpec``; from it we derive
+(1) initialized parameters (``init_params``), (2) ``PartitionSpec`` trees for
+pjit (``tree_pspecs``), and (3) ``ShapeDtypeStruct`` trees for the dry-run
+(``tree_shapes``) — so the 405B-scale configs never allocate on this host.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jnp.ndarray
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]        # logical axis name per dim
+    init: str = "normal"                      # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = spec.scale
+    if spec.init == "scaled":                 # fan-in scaled
+        fan_in = spec.shape[0] if len(spec.shape) else 1
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, dtype) * scale).astype(dtype)
+
+
+def init_params(key, tree, dtype=jnp.float32):
+    """Materialize a ParamSpec tree into arrays."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def resolve_axis(logical: Optional[str], dim: int, rules: Dict[str, tuple],
+                 mesh: Optional[Mesh]):
+    """Map a logical axis to mesh axes, dropping the rule (→ replicate) when
+    the dimension is not divisible by the mesh-axis extent."""
+    if logical is None or logical not in rules:
+        return None
+    axes = rules[logical]
+    if axes is None:
+        return None
+    if mesh is not None:
+        extent = int(np.prod([mesh.shape[a] for a in (
+            axes if isinstance(axes, tuple) else (axes,))]))
+        if extent == 0 or dim % extent != 0:
+            return None
+    return axes
+
+
+def spec_pspec(spec: ParamSpec, rules: Dict[str, tuple],
+               mesh: Optional[Mesh]) -> P:
+    resolved = [resolve_axis(l, d, rules, mesh)
+                for l, d in zip(spec.logical, spec.shape)]
+    # PartitionSpec forbids the same mesh axis appearing twice; keep first use
+    used: set = set()
+    final = []
+    for r in resolved:
+        axes = r if isinstance(r, tuple) else ((r,) if r else ())
+        if any(a in used for a in axes):
+            final.append(None)
+        else:
+            used.update(axes)
+            final.append(r)
+    return P(*final)
+
+
+def tree_pspecs(tree, rules: Dict[str, tuple], mesh: Optional[Mesh] = None):
+    """ParamSpec tree → PartitionSpec tree under the given logical rules."""
+    return jax.tree.map(lambda s: spec_pspec(s, rules, mesh), tree,
+                        is_leaf=is_spec)
+
+
+def tree_shapes(tree, dtype=jnp.float32, extra_leading: Tuple[int, ...] = ()):
+    """ParamSpec tree → ShapeDtypeStruct tree (no allocation; dry-run)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(extra_leading + s.shape, dtype),
+        tree, is_leaf=is_spec)
+
+
+def tree_shardings(tree, rules, mesh: Mesh,
+                   extra_leading_axes: Tuple[Optional[str], ...] = ()):
+    """ParamSpec tree → NamedSharding tree (dry-run in_shardings).
+
+    ``extra_leading_axes``: logical names for prepended dims (e.g. the
+    decentralized-expert dim stacked over ``pod``).
+    """
+    def one(s: ParamSpec):
+        body = spec_pspec(s, rules, mesh)            # divisibility-checked
+        used = {a for part in body if part
+                for a in (part if isinstance(part, tuple) else (part,))}
+        lead = []
+        for l in extra_leading_axes:
+            r = rules.get(l) if l else None
+            axes = r if isinstance(r, tuple) else ((r,) if r else ())
+            if any(a in used for a in axes):
+                lead.append(None)
+            else:
+                used.update(axes)
+                lead.append(r)
+        return NamedSharding(mesh, P(*lead, *body))
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return int(sum(np.prod(l.shape) if is_spec(l) else l.size for l in leaves))

@@ -1,0 +1,319 @@
+"""Recurrent / state-space blocks: chunkwise linear attention (the shared
+TPU-native machinery), mLSTM + sLSTM (xLSTM), and Mamba2 (SSD).
+
+TPU adaptation (see DESIGN.md): instead of porting CUDA selective-scan, all
+parallel-in-time recurrences use the *chunkwise* formulation — intra-chunk
+work is dense MXU matmuls, the inter-chunk carry is a short ``lax.scan`` over
+(seq/chunk) states. The intra-chunk part has a Pallas kernel
+(repro/kernels/chunk_scan.py); this module is the reference/jnp path, and the
+decode path is the O(1)-per-token state update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .params import ParamSpec
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Chunkwise linear attention:  y_t = q_t · Σ_{s≤t} (Π_{r=s+1..t} g_r) k_s v_sᵀ
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(q: Array, k: Array, v: Array, log_g: Array,
+                             chunk: int,
+                             state: Optional[Array] = None,
+                             use_kernel: bool = False
+                             ) -> Tuple[Array, Array]:
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_g: (B,S,H) per-step log decay ≤ 0.
+
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv)).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, log_g = zpad(q), zpad(k), zpad(v), zpad(log_g)
+    Sp = S + pad
+    NC = Sp // chunk
+    cshape = lambda a: a.reshape(B, NC, chunk, *a.shape[2:])
+    qc, kc, vc, gc = cshape(q), cshape(k), cshape(v), cshape(log_g)
+
+    cum = jnp.cumsum(gc.astype(jnp.float32), axis=2)          # (B,NC,L,H)
+    total = cum[:, :, -1]                                     # (B,NC,H)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        intra, chunk_kv = kops.chunk_scan(qc, kc, vc, cum)
+    else:
+        # intra-chunk: D[t,s] = exp(cum_t − cum_s) for s ≤ t. Mask BEFORE the
+        # exp — masking after leaks inf into the where-gradient (NaN).
+        decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,L,L,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.exp(jnp.where(tri[None, None, :, :, None], decay, -jnp.inf))
+        scores = jnp.einsum("bclhd,bcmhd->bclmh", qc, kc).astype(jnp.float32)
+        intra = jnp.einsum("bclmh,bcmhv->bclhv", scores * D,
+                           vc.astype(jnp.float32))
+        # per-chunk kv outer product with decay-to-chunk-end on k
+        k_dec = kc.astype(jnp.float32) * jnp.exp(total[:, :, None, :]
+                                                 - cum)[..., None]
+        chunk_kv = jnp.einsum("bclhd,bclhv->bchdv", k_dec,
+                              vc.astype(jnp.float32))          # (B,NC,H,dk,dv)
+
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def step(s, inputs):
+        q_i, cum_i, total_i, kv_i = inputs
+        # contribution of the carried state to every position in the chunk
+        y_i = jnp.einsum("blhd,bhdv->blhv",
+                         q_i.astype(jnp.float32) * jnp.exp(cum_i)[..., None],
+                         s)
+        s_next = jnp.exp(total_i)[:, :, None, None] * s + kv_i
+        return s_next, y_i
+
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(cum, 1, 0),
+          jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_kv, 1, 0))
+    state, inter = jax.lax.scan(step, state, xs)
+    inter = jnp.moveaxis(inter, 0, 1)                          # (B,NC,L,H,dv)
+
+    y = (intra + inter).reshape(B, Sp, H, dv)[:, :S]
+    return y.astype(v.dtype), state
+
+
+def linear_attention_step(state: Array, q: Array, k: Array, v: Array,
+                          g: Array) -> Tuple[Array, Array]:
+    """O(1) decode update. state: (B,H,dk,dv); q,k: (B,H,dk); v: (B,H,dv);
+    g: (B,H) decay. Returns (y (B,H,dv), new_state)."""
+    state = g[..., None, None] * state + k[..., None] * v[..., None, :]
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory, parallelizable
+# ---------------------------------------------------------------------------
+
+def _d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def mlstm_specs(cfg) -> Dict[str, ParamSpec]:
+    D, Di, H = cfg.d_model, _d_inner(cfg), cfg.n_heads
+    return {
+        "w_in": ParamSpec((D, 2 * Di), ("embed", "inner"), "scaled"),
+        "w_qkv": ParamSpec((Di, 3 * Di), ("inner", "inner_qkv"), "scaled"),
+        "w_gates": ParamSpec((Di, 2 * H), ("inner", None), "scaled"),
+        "b_gates": ParamSpec((2 * H,), (None,), "zeros"),
+        "w_out": ParamSpec((Di, D), ("inner", "embed"), "scaled"),
+        "norm": ParamSpec((Di,), (None,), "ones"),
+    }
+
+
+def _mlstm_qkvg(params, x: Array, cfg):
+    dt = x.dtype
+    B, S, _ = x.shape
+    Di, H = _d_inner(cfg), cfg.n_heads
+    dh = Di // H
+    h_in = x @ params["w_in"].astype(dt)                       # (B,S,2Di)
+    xm, z = jnp.split(h_in, 2, axis=-1)
+    qkv = xm @ params["w_qkv"].astype(dt)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = (B, S, H, dh)
+    q = q.reshape(shape) / jnp.sqrt(jnp.float32(dh)).astype(dt)
+    k, v = k.reshape(shape), v.reshape(shape)
+    gates = xm @ params["w_gates"].astype(dt) + params["b_gates"].astype(dt)
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                # (B,S,H) ×2
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(i_pre.astype(jnp.float32)).astype(dt)
+    return q, k * i_gate[..., None], v, log_f, z
+
+
+def mlstm_block(params, x: Array, cfg, *, use_kernel: bool = False) -> Array:
+    """Full-sequence mLSTM (pre-norm residual handled by the caller)."""
+    B, S, _ = x.shape
+    Di = _d_inner(cfg)
+    q, k, v, log_f, z = _mlstm_qkvg(params, x, cfg)
+    # normalizer: extra all-ones value channel (matrix memory n_t)
+    v_ext = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y, _ = chunked_linear_attention(q, k, v_ext, log_f, cfg.ssm.chunk,
+                                    use_kernel=use_kernel)
+    num, den = y[..., :-1], y[..., -1:]
+    h = num / (jnp.abs(den) + 1.0)
+    h = h.reshape(B, S, Di)
+    h = rms_norm(h, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["w_out"].astype(x.dtype)
+
+
+def mlstm_step(params, x: Array, cfg, state: Array):
+    """x: (B, 1, D); state: (B, H, dh, dh+1) matrix memory (+normalizer)."""
+    B = x.shape[0]
+    Di, H = _d_inner(cfg), cfg.n_heads
+    q, k, v, log_f, z = _mlstm_qkvg(params, x, cfg)
+    v_ext = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y, state = linear_attention_step(state, q[:, 0], k[:, 0], v_ext[:, 0],
+                                     jnp.exp(log_f[:, 0]))
+    num, den = y[..., :-1], y[..., -1:]
+    h = (num / (jnp.abs(den) + 1.0)).reshape(B, 1, Di)
+    h = rms_norm(h, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["w_out"].astype(x.dtype), state
+
+
+def mlstm_state_shape(cfg, batch: int) -> Tuple[int, ...]:
+    Di, H = _d_inner(cfg), cfg.n_heads
+    dh = Di // H
+    return (batch, H, dh, dh + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, sequential (exp-gating, stabilized)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg) -> Dict[str, ParamSpec]:
+    D, Di = cfg.d_model, _d_inner(cfg)
+    return {
+        "w_gates": ParamSpec((D, 4 * Di), ("embed", "inner"), "scaled"),
+        "r_gates": ParamSpec((4 * Di,), (None,), "zeros"),   # diagonal recurrence
+        "b_gates": ParamSpec((4 * Di,), (None,), "zeros"),
+        "w_out": ParamSpec((Di, D), ("inner", "embed"), "scaled"),
+        "norm": ParamSpec((Di,), (None,), "ones"),
+    }
+
+
+def slstm_scan(params, x: Array, cfg, state=None):
+    """Sequential sLSTM with stabilized exponential gating.
+
+    state: (c, n, m, h) each (B, Di). Returns (y (B,S,D), state).
+    Recurrence is diagonal (elementwise h_{t-1} feedback) — a documented
+    simplification of the paper's block-diagonal recurrent matrix that keeps
+    the sequential structure (what matters for sharding/roofline).
+    """
+    dt = x.dtype
+    B, S, D = x.shape
+    Di = _d_inner(cfg)
+    pre = (x @ params["w_gates"].astype(dt) +
+           params["b_gates"].astype(dt)).astype(jnp.float32)  # (B,S,4Di)
+    r = params["r_gates"].astype(jnp.float32)
+    if state is None:
+        z0 = jnp.zeros((B, Di), jnp.float32)
+        state = (z0, z0, jnp.full((B, Di), -1e30, jnp.float32), z0)
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        g = pre_t + r[None, :] * jnp.tile(h, (1, 4))
+        i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_pre)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(dt)                    # (B,S,Di)
+    hs = rms_norm(hs, params["norm"], cfg.norm_eps)
+    return hs @ params["w_out"].astype(dt), state
+
+
+def slstm_state_shapes(cfg, batch: int):
+    Di = _d_inner(cfg)
+    return tuple((batch, Di) for _ in range(4))
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg) -> Dict[str, ParamSpec]:
+    D, Di, N, H = cfg.d_model, _d_inner(cfg), cfg.ssm.state, cfg.n_heads
+    conv_ch = Di + 2 * N
+    return {
+        "w_in": ParamSpec((D, 2 * Di + 2 * N + H), ("embed", "inner"), "scaled"),
+        "conv_w": ParamSpec((cfg.ssm.conv, conv_ch), (None, "inner"), "scaled"),
+        "A_log": ParamSpec((H,), (None,), "zeros"),
+        "D_skip": ParamSpec((H,), (None,), "ones"),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "norm": ParamSpec((Di,), (None,), "ones"),
+        "w_out": ParamSpec((Di, D), ("inner", "embed"), "scaled"),
+    }
+
+
+def _causal_conv(x: Array, w: Array, carry: Optional[Array] = None):
+    """Depthwise causal conv1d. x: (B,S,C); w: (W,C). Returns (y, new_carry)
+    where carry is the last W−1 inputs (decode state)."""
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(y), xp[:, -(W - 1):] if W > 1 else carry
+
+
+def _mamba2_inner(params, x: Array, cfg):
+    dt_ = x.dtype
+    B, S, D = x.shape
+    Di, N, H = _d_inner(cfg), cfg.ssm.state, cfg.n_heads
+    P = Di // H
+    proj = x @ params["w_in"].astype(dt_)
+    xs, z, Bm, Cm, dt_raw = jnp.split(
+        proj, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+    return xs, z, Bm, Cm, dt_raw, (B, S, Di, N, H, P)
+
+
+def mamba2_block(params, x: Array, cfg, *, use_kernel: bool = False) -> Array:
+    xs, z, Bm, Cm, dt_raw, (B, S, Di, N, H, P) = _mamba2_inner(params, x, cfg)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, params["conv_w"].astype(x.dtype))
+    xs, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))             # (H,)
+    log_g = dt * A[None, None, :]                                 # (B,S,H)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N)) * \
+        dt[..., None].astype(x.dtype)
+    v = xs.reshape(B, S, H, P)
+    y, _ = chunked_linear_attention(q, k, v, log_g, cfg.ssm.chunk,
+                                    use_kernel=use_kernel)
+    y = y + params["D_skip"].astype(x.dtype)[None, None, :, None] * v
+    y = y.reshape(B, S, Di) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def mamba2_step(params, x: Array, cfg, state):
+    """state: (ssm_state (B,H,N,P), conv_carry (B,W−1,C))."""
+    ssm_state, conv_carry = state
+    xs, z, Bm, Cm, dt_raw, (B, S, Di, N, H, P) = _mamba2_inner(params, x, cfg)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, conv_carry = _causal_conv(conv_in,
+                                        params["conv_w"].astype(x.dtype),
+                                        conv_carry)
+    xs, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    g = jnp.exp(dt * A[None, :])                                  # (B,H)
+    q = jnp.broadcast_to(Cm[:, 0, None, :], (B, H, N))
+    k = jnp.broadcast_to(Bm[:, 0, None, :], (B, H, N)) * \
+        dt[..., None].astype(x.dtype)
+    v = xs[:, 0].reshape(B, H, P)
+    y, ssm_state = linear_attention_step(ssm_state, q, k, v, g)
+    y = y + params["D_skip"].astype(x.dtype)[None, :, None] * v
+    y = y.reshape(B, 1, Di) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype), (ssm_state, conv_carry)
+
+
+def mamba2_state_shapes(cfg, batch: int):
+    Di, N, H = _d_inner(cfg), cfg.ssm.state, cfg.n_heads
+    P = Di // H
+    return ((batch, H, N, P), (batch, cfg.ssm.conv - 1, Di + 2 * N))

@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, apply_updates, init_state, lr_at

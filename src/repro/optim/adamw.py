@@ -1,0 +1,107 @@
+"""Pure-JAX AdamW with global-norm clipping and mixed-precision master
+weights (optax is not available offline; this is the full substrate).
+
+State is a pytree mirroring the parameters, so it inherits their sharding
+(ZeRO-1: optimizer state sharded exactly like the FSDP-sharded params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak; scaled by the schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"         # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * \
+            0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def init_state(params, keep_master: Optional[bool] = None) -> Dict[str, Any]:
+    """m/v in f32; optional f32 master copy when params are low-precision."""
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if keep_master is None:
+        keep_master = any(p.dtype != jnp.float32
+                          for p in jax.tree.leaves(params))
+    state = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if keep_master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = lr_at(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.asarray(1.0)
+
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        master32 = master.astype(jnp.float32)
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * master32
+        new_master = master32 - lr * step
+        return new_master.astype(p.dtype), m, v, new_master
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], masters)
+    # unzip the 4-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if "master" in state:
+        new_state["master"] = jax.tree.map(
+            lambda t: t[3], out, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, serve_step_fn
+from .ensemble_engine import DecentralizedServer
+from .scheduler import Request, SlotServer

@@ -1,0 +1,68 @@
+"""Serving runtime: prefill + single-token decode (``serve_step``) with KV
+caches / recurrent state, plus a sampled generation loop."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+Array = jnp.ndarray
+
+
+@dataclass
+class ServeEngine:
+    model: Model
+    cache_len: int
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.cache_len,
+                                            use_kernel=self.use_kernel))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(
+                p, c, t, pos, use_kernel=self.use_kernel))
+
+    def prefill(self, params, batch):
+        return self._prefill(params, batch)
+
+    def decode_step(self, params, cache, tokens: Array, pos) -> Tuple[Array, Any]:
+        return self._decode(params, cache, tokens, jnp.asarray(pos))
+
+    def generate(self, params, batch, n_new: int, key,
+                 temperature: float = 1.0) -> Array:
+        """Prefill on the prompt then sample ``n_new`` tokens. Returns
+        (B, n_new). Sampling is the Eq. 13 rule restricted (by 1-sparsity)
+        to the single active position — ordinary AR decoding."""
+        logits, cache = self.prefill(params, batch)
+        prompt_len = logits.shape[1]
+        last = logits[:, -1]
+        out = []
+        tok = None
+        for i in range(n_new):
+            key, sub = jax.random.split(key)
+            if temperature == 0:
+                tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(sub, last / temperature, axis=-1
+                                             ).astype(jnp.int32)
+            out.append(tok)
+            if i == n_new - 1:
+                break
+            last, cache = self.decode_step(params, cache, tok,
+                                           prompt_len + i)
+        return jnp.stack(out, axis=1)
+
+
+def serve_step_fn(model: Model, *, use_kernel: bool = False):
+    """The raw (params, cache, tokens, pos) → (logits, cache) function that
+    the dry-run lowers for decode shapes."""
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos,
+                                 use_kernel=use_kernel)
+    return serve_step

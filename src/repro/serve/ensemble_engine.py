@@ -1,0 +1,137 @@
+"""Decentralized ensemble serving (paper §5.2).
+
+Deployment model mirrors the paper: each expert lives on its own pod; the
+parameter-free centroid router runs at the front end on the request's frozen
+-encoder features. Two in-process strategies:
+
+* ``grouped_top1`` — the paper's main (compute-matched) setting: requests
+  are grouped by their routed expert and each group is decoded by exactly
+  one expert (host-side dispatcher, per-expert engines).
+* ``mixture`` — the general top-k path: run the top-k experts and mix their
+  next-token *probabilities* with the renormalized router weights — the
+  exact Eq. 27 recomposition (validated against the theory tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ensemble import mix_expert_logits
+from repro.core.router import CentroidRouter
+from repro.models.model import Model
+from .engine import ServeEngine
+
+Array = jnp.ndarray
+
+
+@dataclass
+class DecentralizedServer:
+    model: Model
+    expert_params: List[Any]            # K parameter pytrees
+    router: CentroidRouter
+    cache_len: int
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self.engine = ServeEngine(self.model, self.cache_len,
+                                  use_kernel=self.use_kernel)
+
+    @property
+    def K(self) -> int:
+        return len(self.expert_params)
+
+    # ------------------------------------------------------------------
+    # Routing
+    # ------------------------------------------------------------------
+
+    def route(self, features: Array) -> Array:
+        """(B, D) → top-k-filtered weights (B, K)."""
+        return self.router.route(features)
+
+    # ------------------------------------------------------------------
+    # grouped top-1 (compute-matched, the paper's main tables)
+    # ------------------------------------------------------------------
+
+    def generate_top1(self, batch: Dict[str, Array], n_new: int, key,
+                      temperature: float = 1.0) -> np.ndarray:
+        feats = batch["features"]
+        expert_of = np.asarray(self.router.top1(feats))       # (B,)
+        B = expert_of.shape[0]
+        out = np.zeros((B, n_new), dtype=np.int32)
+        for k in range(self.K):
+            sel = np.where(expert_of == k)[0]
+            if len(sel) == 0:
+                continue
+            sub = {name: v[sel] for name, v in batch.items()
+                   if name != "features"}
+            key, gk = jax.random.split(key)
+            toks = self.engine.generate(self.expert_params[k], sub, n_new,
+                                        gk, temperature)
+            out[sel] = np.asarray(toks)
+        return out
+
+    # ------------------------------------------------------------------
+    # mixture (general top-k, exact Eq. 27)
+    # ------------------------------------------------------------------
+
+    def mixture_next_probs(self, batch: Dict[str, Array]) -> Array:
+        """Run every expert's prefill and mix last-position distributions.
+        Returns (B, V) ensemble next-token probabilities."""
+        weights = self.route(batch["features"])               # (B, K)
+        sub = {k: v for k, v in batch.items() if k != "features"}
+        last_logits = []
+        for params in self.expert_params:
+            logits, _ = self.engine.prefill(params, sub)
+            last_logits.append(logits[:, -1])
+        stacked = jnp.stack(last_logits)                      # (K, B, V)
+        return mix_expert_logits(stacked, weights)
+
+    def generate_mixture(self, batch: Dict[str, Array], n_new: int, key,
+                         temperature: float = 1.0) -> Array:
+        """Top-k mixture decoding: every kept expert decodes in lockstep and
+        distributions are mixed each step."""
+        weights = self.route(batch["features"])               # (B, K)
+        sub = {k: v for k, v in batch.items() if k != "features"}
+        states = []
+        for params in self.expert_params:
+            logits, cache = self.engine.prefill(params, sub)
+            states.append((logits[:, -1], cache))
+        prompt_len = sub["tokens"].shape[1] + (
+            self.model.cfg.n_patches if self.model.cfg.family == "vlm" else 0)
+        out = []
+        for i in range(n_new):
+            probs = mix_expert_logits(
+                jnp.stack([s[0] for s in states]), weights)   # (B, V)
+            key, sk = jax.random.split(key)
+            if temperature == 0:
+                tok = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+            else:
+                logp = jnp.log(jnp.maximum(probs, 1e-30)) / temperature
+                tok = jax.random.categorical(sk, logp, -1).astype(jnp.int32)
+            out.append(tok)
+            if i == n_new - 1:
+                break
+            states = [
+                self.engine.decode_step(p, c, tok, prompt_len + i)
+                for p, (_, c) in zip(self.expert_params,
+                                     [(s[0], s[1]) for s in states])]
+        return jnp.stack(out, axis=1)
+
+    def ensemble_eval_nll(self, batch: Dict[str, Array]) -> Array:
+        """Teacher-forced per-token NLL of the router-weighted mixture —
+        the metric the parity benchmarks report."""
+        weights = self.route(batch["features"])               # (B, K)
+        sub = {k: v for k, v in batch.items() if k != "features"}
+        all_logits = jnp.stack([self.model.forward(p, sub)
+                                for p in self.expert_params])  # (K,B,S,V)
+        probs = mix_expert_logits(
+            all_logits, weights[:, None, :].repeat(all_logits.shape[2], 1))
+        logp = jnp.log(jnp.maximum(probs, 1e-30))
+        labels = sub["labels"]
+        nll = -jnp.take_along_axis(logp[:, :-1], labels[:, 1:, None],
+                                   axis=-1)[..., 0]
+        return nll.mean()

@@ -1,0 +1,121 @@
+"""Continuous batching: a slot-based request scheduler over one decode
+engine (vLLM-style, minus paging — slots are fixed-length cache rows).
+
+Requests arrive with different prompt lengths and budgets; the server
+admits each into a free slot (single-row prefill, inserted into the batch
+cache at the slot index), decodes ALL active slots in lockstep with a
+per-slot position vector, and retires finished requests — so new work
+never waits for the longest running request.
+
+v1 scope: attention-cache families (dense / moe / vlm) — their cache
+layout is {k, v}: (L, B, S, KV, dh) with the slot (batch) dim at index 1.
+In the decentralized deployment each expert pod runs one SlotServer and
+the front-end router (Eq. 28) assigns requests to pods.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+Array = jnp.ndarray
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,) int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class SlotServer:
+    def __init__(self, model: Model, params, n_slots: int, cache_len: int):
+        assert model.cfg.family in ("dense", "moe", "vlm"), \
+            "v1 slot server supports attention-cache families"
+        self.model, self.params = model, params
+        self.n_slots, self.cache_len = n_slots, cache_len
+        self.cache = model.init_cache(n_slots, cache_len)
+        self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.last_tok = np.zeros(n_slots, dtype=np.int32)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    # ------------------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    @property
+    def active(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def admit(self, req: Request) -> bool:
+        """Prefill the request alone and insert its KV rows at a free slot."""
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        batch = {"tokens": jnp.asarray(req.tokens[None, :]),
+                 "labels": jnp.zeros((1, len(req.tokens)), jnp.int32)}
+        logits, row_cache = self._prefill(self.params, batch)
+        # greedy first token from the prompt's last position
+        first = int(jnp.argmax(logits[0, -1]))
+        req.out.append(first)
+        self.cache = jax.tree.map(
+            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
+                full, row.astype(full.dtype), slot, axis=1),
+            self.cache, row_cache)
+        self.slot_req[slot] = req
+        self.pos[slot] = len(req.tokens)
+        self.last_tok[slot] = first
+        return True
+
+    def step(self) -> List[Request]:
+        """One lockstep decode over every active slot. Returns requests
+        retired this step."""
+        act = self.active
+        if not act:
+            return []
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        retired = []
+        for slot in act:
+            req = self.slot_req[slot]
+            req.out.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            self.last_tok[slot] = nxt[slot]
+            if req.done or self.pos[slot] >= self.cache_len - 1:
+                retired.append(req)
+                self.slot_req[slot] = None
+        return retired
+
+    # ------------------------------------------------------------------
+
+    def serve(self, queue: List[Request], *, max_steps: int = 10_000
+              ) -> Dict[int, List[int]]:
+        """Drive the queue to completion with continuous admission."""
+        pending = list(queue)
+        finished: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            while pending and self.free_slots():
+                self.admit(pending.pop(0))
+            if not self.active and not pending:
+                break
+            for req in self.step():
+                finished[req.rid] = req.out
+        return finished

@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules (the distribution configuration).
+
+Meshes (launch/mesh.py):
+    single-pod : (16, 16)      axes ("data", "model")
+    multi-pod  : (2, 16, 16)   axes ("pod", "data", "model")
+
+Two training modes:
+
+* ``dense`` (the paper's centralized baseline): one model; batch and FSDP
+  shard over (pod, data) — gradient all-reduce and FSDP all-gathers CROSS
+  the pod boundary. This is the cost the paper's scheme removes.
+* ``decentralized`` (the paper's scheme): K experts stacked on a leading
+  ``dexpert`` dim sharded over ``pod``. Every collective's replica group
+  stays inside one pod — the lowered HLO contains no cross-pod collective
+  (launch/roofline.py verifies this from the compiled text).
+
+Tensor parallelism (``model`` axis) rules are shared: vocab/heads/ffn/expert
+dims shard over ``model``; kv_heads fall back to replicated when the head
+count does not divide the axis (e.g. llama3 kv=8 on model=16).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def logical_rules(*, multi_pod: bool, decentralized: bool,
+                  fsdp: bool = True) -> Dict[str, object]:
+    """Logical axis name → mesh axis (or tuple) mapping."""
+    if decentralized:
+        fsdp_axes = ("data",)          # pod is the expert axis
+    else:
+        fsdp_axes = ("pod", "data") if multi_pod else ("data",)
+    rules: Dict[str, object] = {
+        # ---- parameter axes
+        "vocab": "model",
+        "embed": fsdp_axes if fsdp else None,    # ZeRO-3-style weight shard
+        "mlp": "model",
+        "expert_mlp": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "expert": "model",                        # MoE expert parallelism
+        "inner": "model",
+        "inner_qkv": "model",
+        "vision": None,
+        "audio": None,
+        "layer": None,                            # scanned dim, never sharded
+        # ---- decentralized expert stacking dim
+        "dexpert": "pod" if (multi_pod and decentralized) else None,
+        # ---- activation/batch axes
+        "act_batch": (("pod", "data") if (multi_pod and not decentralized)
+                      else ("data",)),
+        "act_seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_vocab": "model",
+        "kv_cache_batch": (("pod", "data") if (multi_pod and not decentralized)
+                           else ("data",)),
+        "kv_cache_heads": "model",
+    }
+    return rules
+
+
+def batch_pspec(rules) -> P:
+    return P(rules["act_batch"])
+
+
+def data_shardings(rules, mesh: Mesh, cfg, kind: str,
+                   decentralized_k: int = 0) -> Dict[str, NamedSharding]:
+    """Shardings for the input batch pytree (tokens/labels/patches/frames).
+
+    decentralized_k > 0 prepends the expert dim (sharded over pod).
+    """
+    lead: Tuple = (rules["dexpert"],) if decentralized_k else ()
+    b = rules["act_batch"]
+
+    def ns(*axes):
+        return NamedSharding(mesh, P(*lead, *axes))
+
+    shardings = {"tokens": ns(b, None), "labels": ns(b, None)}
+    if cfg.family == "vlm":
+        shardings["patches"] = ns(b, None, None)
+    if cfg.family == "audio":
+        shardings["frames"] = ns(b, None, None)
+    return shardings
+
+
+def cache_pspec_tree(cache_shapes, rules, mesh: Mesh):
+    """KV-cache / recurrent-state shardings: batch over data, heads over
+    model when divisible. Cache layouts all carry the layer/group dim first
+    and batch second (attention) or inside (states) — we shard batch and
+    leave exotic dims replicated when indivisible."""
+    def one(shape_struct):
+        shape = shape_struct.shape
+        ndim = len(shape)
+        b_axes = rules["kv_cache_batch"]
+        extent = 1
+        for a in (b_axes if isinstance(b_axes, tuple) else (b_axes,)):
+            extent *= mesh.shape[a]
+        spec = [None] * ndim
+        # find the batch dim: layouts here are (L, B, ...) or (G, gm, B, ...)
+        for cand in (1, 2):
+            if ndim > cand and shape[cand] % extent == 0 and shape[cand] > 1:
+                spec[cand] = b_axes
+                break
+        # (L,B,S,KV,dh) attention-cache layouts: shard kv-heads over model
+        # when divisible, else shard the *sequence* dim (distributed-decode
+        # partial-softmax layout — XLA inserts the reduction collectives).
+        if ndim == 5 and spec[1] == b_axes:
+            kv, seq = shape[-2], shape[2]
+            if kv % mesh.shape["model"] == 0 and kv > 1:
+                spec[-2] = "model"
+            elif seq % mesh.shape["model"] == 0 and seq > 1:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    import jax
+    return jax.tree.map(one, cache_shapes)

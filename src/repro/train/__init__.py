@@ -1,0 +1,4 @@
+from .trainer import (TrainConfig, init_train_state,
+                      make_decentralized_train_step, make_eval_step,
+                      make_train_step, stack_expert_states, state_shardings,
+                      train_host_loop, unstack_expert_states)

@@ -1,0 +1,6 @@
+import jax
+
+# Theory checks (continuity equation, decomposition theorem) must be exact to
+# machine precision — enable float64. Production model code pins its own
+# dtypes explicitly so this does not change its semantics.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,87 @@
+"""Balanced spherical k-means + centroid router (paper §5.1–5.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.clustering import (partition_text_only,
+                                   spherical_balanced_kmeans,
+                                   two_stage_balanced_kmeans)
+from repro.core.router import RouterConfig, router_from_clustering
+
+
+def gaussian_mixture(n, K, D, seed=0, sep=4.0):
+    rng = np.random.default_rng(seed)
+    means = rng.normal(size=(K, D)) * sep
+    labels = np.repeat(np.arange(K), n // K)
+    x = means[labels] + rng.normal(size=(len(labels), D))
+    return x, labels
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_per=st.integers(8, 40), K=st.integers(2, 5), D=st.integers(4, 32),
+       seed=st.integers(0, 1000))
+def test_property_balance(n_per, K, D, seed):
+    """Cluster sizes differ by at most 1 (exactly equal when K | N)."""
+    x, _ = gaussian_mixture(n_per * K, K, D, seed)
+    res = spherical_balanced_kmeans(x, K, seed=seed)
+    counts = np.bincount(res.assignment, minlength=K)
+    assert counts.max() - counts.min() <= 1
+    assert counts.sum() == n_per * K
+    np.testing.assert_allclose(np.linalg.norm(res.centroids, axis=1), 1.0,
+                               atol=1e-9)
+
+
+def test_recovers_separated_clusters():
+    x, labels = gaussian_mixture(120, 3, 16, seed=1, sep=8.0)
+    res = spherical_balanced_kmeans(x, 3, seed=1)
+    # cluster ids are permuted; check purity
+    purity = 0
+    for k in range(3):
+        members = labels[res.assignment == k]
+        purity += np.bincount(members, minlength=3).max()
+    assert purity / len(labels) > 0.95
+
+
+def test_two_stage_variant():
+    x, _ = gaussian_mixture(200, 2, 8, seed=2, sep=6.0)
+    res = two_stage_balanced_kmeans(x, 2, fine_k=16, seed=2)
+    counts = np.bincount(res.assignment, minlength=2)
+    # 2-stage balance is approximate (fine-centroid level)
+    assert counts.min() > 0.2 * len(x)
+    np.testing.assert_allclose(np.linalg.norm(res.centroids, axis=1), 1.0,
+                               atol=1e-9)
+
+
+def test_text_only_partition_balanced():
+    a = partition_text_only(103, 4, seed=0)
+    counts = np.bincount(a, minlength=4)
+    assert counts.max() - counts.min() <= 1
+
+
+def test_router_mirrors_partitioning():
+    """§5.1: the centroid router's top-1 must reproduce the (unbalanced)
+    nearest-centroid assignment used at partition time."""
+    x, labels = gaussian_mixture(90, 3, 12, seed=3, sep=8.0)
+    res = spherical_balanced_kmeans(x, 3, seed=3)
+    router = router_from_clustering(res.centroids)
+    top1 = np.asarray(router.top1(jnp.asarray(x, dtype=jnp.float32)))
+    nearest = res.sims.argmax(1)
+    assert (top1 == nearest).mean() > 0.99
+
+
+def test_router_eq28_softmax():
+    """Eq. 28: probabilities = softmax(τ·cos); temperature sharpens."""
+    x, _ = gaussian_mixture(30, 2, 8, seed=4)
+    res = spherical_balanced_kmeans(x, 2, seed=4)
+    xf = jnp.asarray(x, dtype=jnp.float32)
+    cold = router_from_clustering(res.centroids, RouterConfig(temperature=1.0))
+    hot = router_from_clustering(res.centroids, RouterConfig(temperature=50.0))
+    pc, ph = np.asarray(cold.cluster_probs(xf)), np.asarray(hot.cluster_probs(xf))
+    np.testing.assert_allclose(pc.sum(-1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(ph.sum(-1), 1.0, atol=1e-6)
+    assert ph.max(-1).mean() >= pc.max(-1).mean()  # sharper at high τ
+    # top-k filter: k=1 puts all mass on one expert
+    routed = np.asarray(cold.route(xf))
+    np.testing.assert_allclose(routed.max(-1), 1.0, atol=1e-6)

@@ -1,0 +1,109 @@
+"""The headline theorem (paper §4.3): exact equality between the global
+generating velocity and the router-weighted sum of expert velocities."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.decentralize import (ClusterSplit, decomposition_residual,
+                                     expert_velocities,
+                                     global_velocity_from_experts,
+                                     mix_expert_distributions, router_weights,
+                                     topk_filter_renorm)
+from repro.core.dfm import enumerate_states, n_states
+
+
+def make_split(d, N, K, rng, mask_id):
+    S = n_states(d, N)
+    states = enumerate_states(d, N)
+    q = rng.random(S)
+    q[(states == mask_id).any(1)] = 0.0          # mask never in targets
+    q[rng.random(S) < 0.3] = 0.0                 # sparse support
+    if q.sum() == 0:
+        valid = np.where(~(states == mask_id).any(1))[0]
+        q[valid[0]] = 1.0
+    q = q / q.sum()
+    assignment = rng.integers(0, K, size=S)
+    # ensure every cluster owns at least one supported state when possible
+    supp = np.where(q > 0)[0]
+    for k in range(min(K, len(supp))):
+        assignment[supp[k]] = k
+    return ClusterSplit(q=jnp.asarray(q), assignment=assignment, K=K)
+
+
+@pytest.mark.parametrize("d,N,P,K", [(3, 3, 0, 2), (3, 3, 1, 3), (2, 4, 0, 2),
+                                     (4, 2, 0, 4)])
+def test_decomposition_exact(d, N, P, K):
+    """u_global == Σ_k r_k · u_expert_k at every timestep, exactly."""
+    rng = np.random.default_rng(0)
+    mask_id = d - 1
+    split = make_split(d, N, K, rng, mask_id)
+    for t in range(N - P):
+        res = decomposition_residual(split, P, t, d, N, mask_id)
+        assert float(res) < 1e-12
+
+
+def test_router_weights_are_posterior():
+    """Router weights are a proper posterior: nonneg, sum to 1 over k."""
+    d, N, P, K = 3, 3, 0, 3
+    rng = np.random.default_rng(1)
+    split = make_split(d, N, K, rng, d - 1)
+    for t in range(N):
+        r = np.asarray(router_weights(split, P, t, d, N, d - 1))
+        assert (r >= -1e-15).all()
+        np.testing.assert_allclose(r.sum(0), 1.0, atol=1e-12)
+
+
+def test_priors_and_cluster_targets_consistent():
+    d, N, K = 3, 3, 2
+    rng = np.random.default_rng(2)
+    split = make_split(d, N, K, rng, d - 1)
+    prior = np.asarray(split.prior())
+    np.testing.assert_allclose(prior.sum(), 1.0, atol=1e-12)
+    # mixture of cluster targets with prior weights == global target
+    mix = sum(prior[k] * np.asarray(split.cluster_target(k))
+              for k in range(K))
+    np.testing.assert_allclose(mix, np.asarray(split.q), atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(2, 5), seed=st.integers(0, 10_000),
+       t=st.integers(0, 2))
+def test_property_decomposition(K, seed, t):
+    d, N, P = 3, 3, 0
+    rng = np.random.default_rng(seed)
+    split = make_split(d, N, K, rng, d - 1)
+    res = decomposition_residual(split, P, min(t, N - 1), d, N, d - 1)
+    assert float(res) < 1e-10
+
+
+# ---------------------------------------------------------------------------
+# Production-form mixing utilities
+# ---------------------------------------------------------------------------
+
+def test_topk_filter_renorm():
+    w = jnp.asarray([[0.5, 0.1], [0.3, 0.6], [0.2, 0.3]])  # (K=3, B=2)
+    out = np.asarray(topk_filter_renorm(w, 1))
+    np.testing.assert_allclose(out[:, 0], [1.0, 0.0, 0.0])
+    np.testing.assert_allclose(out[:, 1], [0.0, 1.0, 0.0])
+    out2 = np.asarray(topk_filter_renorm(w, 2))
+    np.testing.assert_allclose(out2.sum(0), 1.0, atol=1e-12)
+    assert (out2 > 0).sum() == 4
+    # top-k == K is the identity (after normalization)
+    out3 = np.asarray(topk_filter_renorm(w, 3))
+    np.testing.assert_allclose(out3, np.asarray(w / w.sum(0)), atol=1e-12)
+
+
+def test_mix_expert_distributions_is_convex():
+    rng = np.random.default_rng(3)
+    K, B, V = 4, 5, 7
+    probs = rng.random((K, B, V))
+    probs /= probs.sum(-1, keepdims=True)
+    w = rng.random((K, B))
+    w /= w.sum(0, keepdims=True)
+    mixed = np.asarray(mix_expert_distributions(jnp.asarray(probs),
+                                                jnp.asarray(w)))
+    np.testing.assert_allclose(mixed.sum(-1), 1.0, atol=1e-12)
+    assert (mixed >= 0).all()
+    assert mixed.max() <= probs.max() + 1e-12

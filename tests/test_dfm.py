@@ -1,0 +1,186 @@
+"""Exact verification of the discrete-time DFM framework (paper §3, §4.1).
+
+Everything is enumerated on [d]^N with small d, N so the Continuity Equation
+and the sampling rule can be checked to machine precision.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import dfm
+from repro.core.autoregressive import (ar_conditional_velocity,
+                                       ar_marginal_velocity, ar_path,
+                                       mask_state)
+from repro.core.dfm import (apply_sampling_rule, chain_marginals,
+                            continuity_residual, divergence, encode,
+                            enumerate_states, is_one_sparse, n_states,
+                            neighbor_table, velocity_is_valid)
+
+
+def random_q(d, N, rng, sparse=False):
+    S = n_states(d, N)
+    q = rng.random(S)
+    if sparse:
+        q[rng.random(S) < 0.5] = 0.0
+        if q.sum() == 0:
+            q[rng.integers(S)] = 1.0
+    return jnp.asarray(q / q.sum())
+
+
+# ---------------------------------------------------------------------------
+# State-space utilities
+# ---------------------------------------------------------------------------
+
+def test_encode_decode_roundtrip():
+    d, N = 4, 3
+    states = enumerate_states(d, N)
+    idx = encode(states, d)
+    assert np.array_equal(idx, np.arange(d**N))
+    assert np.array_equal(dfm.decode(idx, d, N), states)
+
+
+def test_neighbor_table_hamming():
+    d, N = 3, 3
+    nbr = neighbor_table(d, N)
+    states = enumerate_states(d, N)
+    # nbr[z, i, a] must equal z with position i set to a
+    for z in range(0, d**N, 5):
+        for i in range(N):
+            for a in range(d):
+                expected = states[z].copy()
+                expected[i] = a
+                assert np.array_equal(states[nbr[z, i, a]], expected)
+
+
+# ---------------------------------------------------------------------------
+# AR path: Continuity Equation + generation (the §4.2 proofs, numerically)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,N,P", [(3, 3, 0), (3, 3, 1), (2, 4, 2), (4, 2, 0)])
+def test_ar_continuity_equation_and_generation(d, N, P):
+    """The marginal velocity of the AR path satisfies Eq. 17 at every step,
+    and the sampling rule (Eq. 13) pushes p_t to exactly p_{t+1}."""
+    rng = np.random.default_rng(0)
+    mask_id = d - 1
+    q = random_q(d, N, rng)
+    # mask token must not appear in targets (it is the source alphabet)
+    states = enumerate_states(d, N)
+    q = jnp.where(jnp.asarray((states == mask_id).any(1)), 0.0, q)
+    q = q / q.sum()
+
+    path = ar_path(q, P, d, N, mask_id)
+    nbr = neighbor_table(d, N)
+    T = N - P
+    for t in range(T):
+        p_t, p_next = path.marginal(t), path.marginal(t + 1)
+        u = ar_marginal_velocity(q, P, t, d, N, mask_id)
+        assert velocity_is_valid(u, p_t)
+        assert is_one_sparse(u, p_t)
+        res = continuity_residual(p_t, p_next, u, nbr)
+        np.testing.assert_allclose(np.asarray(res), 0.0, atol=1e-12)
+        pushed = apply_sampling_rule(p_t, u, nbr)
+        np.testing.assert_allclose(np.asarray(pushed), np.asarray(p_next),
+                                   atol=1e-12)
+
+
+def test_ar_chain_reaches_target():
+    """Rolling the sampling rule from the fully-masked source reproduces the
+    target distribution q exactly — 'decentralized ≡ centralized' requires
+    this baseline semantics first."""
+    d, N, P = 3, 3, 0
+    mask_id = d - 1
+    rng = np.random.default_rng(1)
+    q = random_q(d, N, rng, sparse=True)
+    states = enumerate_states(d, N)
+    q = jnp.where(jnp.asarray((states == mask_id).any(1)), 0.0, q)
+    q = q / q.sum()
+    path = ar_path(q, P, d, N, mask_id)
+    nbr = neighbor_table(d, N)
+    us = [ar_marginal_velocity(q, P, t, d, N, mask_id) for t in range(N - P)]
+    ps = chain_marginals(path.marginal(0), us, nbr)
+    np.testing.assert_allclose(np.asarray(ps[-1]), np.asarray(q), atol=1e-12)
+
+
+def test_conditional_velocity_matches_theorem1():
+    """Marginalizing the conditional velocities (Eq. 22) through Theorem 1
+    (Eq. 9) gives the same velocity as the closed form."""
+    d, N, P = 3, 3, 1
+    mask_id = d - 1
+    rng = np.random.default_rng(2)
+    q = random_q(d, N, rng)
+    states = enumerate_states(d, N)
+    q = jnp.where(jnp.asarray((states == mask_id).any(1)), 0.0, q)
+    q = q / q.sum()
+    path = ar_path(q, P, d, N, mask_id)
+    for t in range(N - P):
+        cond_u = ar_conditional_velocity(t, P, d, N, mask_id)
+        u_thm = dfm.marginal_velocity(path, t, cond_u)
+        u_closed = ar_marginal_velocity(q, P, t, d, N, mask_id)
+        # compare on reachable states only
+        xt_idx = encode(mask_state(states, P + t, mask_id), d)
+        reach = np.unique(xt_idx[np.asarray(q) > 0])
+        np.testing.assert_allclose(np.asarray(u_thm)[:, :, reach],
+                                   np.asarray(u_closed)[:, :, reach],
+                                   atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Necessity of 1-sparsity (paper §4.2's core structural claim)
+# ---------------------------------------------------------------------------
+
+def test_non_one_sparse_velocity_breaks_generation():
+    """A velocity that moves TWO positions at once can satisfy the Continuity
+    Equation yet fail to generate the path — the paper's motivation for the
+    1-sparse constraint. We construct one explicitly."""
+    d, N = 2, 2
+    nbr = neighbor_table(d, N)
+    S = n_states(d, N)
+    # p_t = delta_{(0,0)}; p_{t+1} = 0.5 delta_{(1,0)} + 0.5 delta_{(0,1)}
+    p_t = jnp.zeros(S).at[encode(np.array([0, 0]), d)].set(1.0)
+    p_next = (jnp.zeros(S)
+              .at[encode(np.array([1, 0]), d)].set(0.5)
+              .at[encode(np.array([0, 1]), d)].set(0.5))
+    # velocity moving BOTH positions by 0.5 from (0,0)
+    u = np.zeros((N, d, S))
+    z = int(encode(np.array([0, 0]), d))
+    for i in range(N):
+        u[i, 1, z] = 0.5
+        u[i, 0, z] = -0.5
+    u = jnp.asarray(u)
+    assert not is_one_sparse(u, p_t)
+    res = continuity_residual(p_t, p_next, u, nbr)
+    np.testing.assert_allclose(np.asarray(res), 0.0, atol=1e-12)  # CE holds...
+    pushed = apply_sampling_rule(p_t, u, nbr)
+    # ...but the sampling rule does NOT produce p_{t+1}: the per-position
+    # product leaks mass onto (1,1) and keeps mass on (0,0).
+    assert np.abs(np.asarray(pushed - p_next)).max() > 0.2
+
+
+# ---------------------------------------------------------------------------
+# Property-based sweep (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 3), N=st.integers(2, 3), P=st.integers(0, 1),
+       seed=st.integers(0, 10_000))
+def test_property_ar_path_always_generates(d, N, P, seed):
+    d = d + 1                      # room for the mask token
+    P = min(P, N - 1)
+    mask_id = d - 1
+    rng = np.random.default_rng(seed)
+    q = random_q(d, N, rng, sparse=True)
+    states = enumerate_states(d, N)
+    q = jnp.where(jnp.asarray((states == mask_id).any(1)), 0.0, q)
+    if float(q.sum()) == 0.0:
+        return
+    q = q / q.sum()
+    path = ar_path(q, P, d, N, mask_id)
+    nbr = neighbor_table(d, N)
+    us = [ar_marginal_velocity(q, P, t, d, N, mask_id) for t in range(N - P)]
+    ps = chain_marginals(path.marginal(0), us, nbr)
+    for t in range(N - P + 1):
+        np.testing.assert_allclose(np.asarray(ps[t]),
+                                   np.asarray(path.marginal(t)), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(ps[-1]), np.asarray(q), atol=1e-10)

@@ -1,0 +1,36 @@
+"""End-to-end dry-run smoke: runs repro.launch.dryrun in a SUBPROCESS (the
+512-placeholder-device env must not leak into this test process) for the
+smallest assigned arch, both modes, and checks the artifact contract."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mode,mesh", [("dense", "single"),
+                                       ("decentralized", "multi")])
+def test_dryrun_smallest_case(tmp_path, mode, mesh):
+    out = str(tmp_path)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm_125m",
+         "--shape", "train_4k", "--mesh", mesh, "--mode", mode,
+         "--out", out],
+        env=env, capture_output=True, text=True, timeout=480, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    case = f"xlstm_125m.train_4k.{mesh}.{mode}"
+    with open(os.path.join(out, case + ".json")) as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == (512 if mesh == "multi" else 256)
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory",
+                                             "collective")
+    assert rec["cost"]["flops"] > 0
+    if mode == "decentralized":
+        # the paper's invariant, from the compiled module
+        assert rec["collectives"]["cross_pod_bytes"] == 0
+        assert rec["collectives"]["cross_pod_ops"] == 0

@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: reduced config (≤2 layers, d_model ≤ 512,
+≤4 experts), one forward + one train-gradient step + prefill/decode
+consistency on CPU. Asserts output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.models import build_model
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, seq=S):
+    ks = jax.random.split(key, 3)
+    n_text = seq - (cfg.n_patches if cfg.family == "vlm" else 0)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, n_text), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, n_text), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, cfg.n_patches, cfg.vision_dim), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.n_audio_frames, cfg.audio_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    logits = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    seq_out = S if cfg.family != "vlm" else S
+    assert logits.shape == (B, seq_out, cfg.vocab), logits.shape
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    loss, grads = jax.jit(
+        lambda p, b: jax.value_and_grad(lambda q: model.loss(q, b)[0])(p)
+    )(params, batch)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    """serve path consistency: prefill on S tokens then decode_step must
+    reproduce the teacher-forced logits at the last position."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    cache_len = S + 8
+
+    logits_tf = model.forward(params, batch)
+    logits_pf, cache = model.prefill(params, batch, cache_len)
+    np.testing.assert_allclose(np.asarray(logits_pf), np.asarray(logits_tf),
+                               rtol=2e-4, atol=2e-4)
+
+    # decode one more token and check shape/finiteness + cross-check: feeding
+    # token t_S via decode matches a fresh forward on S+1 tokens.
+    next_tok = batch["tokens"][:, -1]
+    n_text = batch["tokens"].shape[1]
+    pos = jnp.asarray(S)  # position index of the new token in the full seq
+    logits_dec, cache2 = model.decode_step(params, cache, next_tok, pos)
+    assert logits_dec.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits_dec).all())
+
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], next_tok[:, None]], 1)
+    logits_full = model.forward(params, ext)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_sliding_window_decode():
+    """Ring-buffer cache: decode with window w must match full attention
+    restricted to the last w positions."""
+    from dataclasses import replace
+    cfg = replace(get_smoke_config("qwen3_8b"), sliding_window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits_pf, cache = model.prefill(params, batch, S)
+    assert cache["k"].shape[2] == 8          # cache is the window, not S
+    next_tok = batch["tokens"][:, -1]
+    logits_dec, _ = model.decode_step(params, cache, next_tok, jnp.asarray(S))
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], next_tok[:, None]], 1)
+    logits_full = model.forward(params, ext)   # forward masks by window too
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_param_counts_full_configs():
+    """The full (dry-run-only) configs must hit the advertised scale —
+    sanity-check parameter counts via ParamSpec trees (no allocation)."""
+    from repro.configs.base import get_config
+    from repro.models.params import count_params
+    expect = {
+        "llama3_405b": (380e9, 430e9),
+        "qwen3_moe_235b_a22b": (200e9, 260e9),
+        "granite_3_8b": (7e9, 10e9),
+        "qwen3_8b": (7e9, 10e9),
+        "phi3_medium_14b": (12e9, 16e9),
+        "deepseek_moe_16b": (14e9, 20e9),
+        "internvl2_2b": (1.5e9, 2.6e9),
+        "whisper_small": (0.15e9, 0.5e9),
+        "xlstm_125m": (0.08e9, 0.2e9),
+        "zamba2_2_7b": (2.0e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        model = build_model(get_config(arch))
+        n = count_params(model.param_specs())
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of range"
