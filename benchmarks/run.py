@@ -12,6 +12,7 @@ Benchmarks:
     table8    vision-encoder capacity
     table9    clustering algorithm (1-stage vs 2-stage)
     kernels   Pallas kernel microbenches (CSV: name,us_per_call,derived)
+    serve     looped vs stacked mixture decode steps/sec (K=4)
     roofline  aggregate the dry-run roofline artifacts
 """
 from __future__ import annotations
@@ -37,7 +38,7 @@ def main() -> None:
                       samples=1024 if args.quick else 2048)
 
     from . import (fig1_clustering, kernels_bench, roofline_report,
-                   table7_num_experts, table8_vision_encoder,
+                   serve_bench, table7_num_experts, table8_vision_encoder,
                    table9_clustering, tables_internvl, tables_llava,
                    topk_ablation)
     suite = {
@@ -49,6 +50,7 @@ def main() -> None:
         "table9": lambda: table9_clustering.run(s),
         "topk": lambda: topk_ablation.run(s),
         "kernels": lambda: kernels_bench.run(s),
+        "serve": lambda: serve_bench.run(s),
         "roofline": lambda: roofline_report.run(s),
     }
     selected = args.only or list(suite)

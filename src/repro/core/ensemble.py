@@ -26,6 +26,10 @@ from .router import CentroidRouter
 
 Array = jnp.ndarray
 
+# Floor applied before taking logs of mixture probabilities — shared by every
+# consumer (engine sampling, eval NLL) so the clamp is identical everywhere.
+PROB_FLOOR = 1e-30
+
 
 def mix_expert_logits(expert_logits: Array, weights: Array,
                       *, log_space: bool = False) -> Array:
@@ -39,7 +43,7 @@ def mix_expert_logits(expert_logits: Array, weights: Array,
     w = jnp.moveaxis(weights, -1, 0)                        # (K, ...)
     mixed = mix_expert_distributions(probs, w)
     if log_space:
-        return jnp.log(jnp.maximum(mixed, 1e-30))
+        return jnp.log(jnp.maximum(mixed, PROB_FLOOR))
     return mixed
 
 
@@ -58,6 +62,86 @@ def ensemble_next_token_probs(router: CentroidRouter, features: Array,
     (K, B, V) per-expert next-token logits → (B, V) mixed probabilities."""
     weights = router.route(features)                        # (B, K)
     return mix_expert_logits(expert_logits, weights)
+
+
+def stack_expert_params(expert_params):
+    """K per-expert parameter pytrees → one pytree with a leading K dim on
+    every leaf — the serving twin of ``trainer.stack_expert_states``. The
+    leading dim is the ``dexpert`` axis that shards over the ``pod`` mesh
+    axis (sharding/rules.py), so a vmapped decode over it is one sharded op
+    with zero cross-pod traffic."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *expert_params)
+
+
+def stack_experts_for_decode(expert_params):
+    """Stack experts in the DECODE layout: scanned layer stacks (the
+    ``blocks`` subtrees) carry the K dim at axis 1, *after* the scanned
+    layer dim; everything else leads with K.
+
+    ``decode_step``/``prefill`` consume layer stacks with ``lax.scan``,
+    which requires the scan axis first — vmapping over a leading K would
+    make XLA transpose every parameter (and cache) leaf to (L, K, …) on
+    EVERY step. Pre-storing the scanned stacks layer-major makes the
+    vmapped step transpose-free (~1.4× decode steps/sec at K=4 on CPU).
+    The K dim still shards over ``pod`` regardless of its position.
+
+    Returns ``(stacked, in_axes)`` where ``in_axes`` is the per-leaf vmap
+    axis tree to pass to ``jax.vmap``.
+    """
+    stacked = stack_expert_params(expert_params)
+    axes = jax.tree.map(lambda _: 0, stacked)
+
+    def layer_major(sub):
+        return (jax.tree.map(lambda l: jnp.moveaxis(l, 0, 1), sub),
+                jax.tree.map(lambda _: 1, sub))
+
+    if isinstance(stacked, dict) and "blocks" in stacked:
+        stacked, axes = dict(stacked), dict(axes)
+        stacked["blocks"], axes["blocks"] = layer_major(stacked["blocks"])
+        if "encoder" in stacked:          # audio enc-dec: encoder stack too
+            enc, eaxes = dict(stacked["encoder"]), dict(axes["encoder"])
+            enc["blocks"], eaxes["blocks"] = layer_major(enc["blocks"])
+            stacked["encoder"], axes["encoder"] = enc, eaxes
+    return stacked, axes
+
+
+def stacked_cache_axes(cache_like):
+    """vmap axis tree for a stacked decode cache: every cache leaf carries
+    its scan (layer/group) dim first, so the expert dim lives at axis 1."""
+    return jax.tree.map(lambda _: 1, cache_like)
+
+
+def make_stacked_serving(model, expert_params, cache_len: int, *,
+                         use_kernel: bool = False):
+    """Build the stacked-expert decode core shared by every mixture server
+    (``DecentralizedServer``, ``MixtureSlotServer``, serve_bench): experts
+    stacked in the decode layout plus jitted whole-ensemble steps.
+
+    Returns ``(stacked, param_axes, prefill_all, mix_decode)`` where
+
+    * ``prefill_all(stacked, batch)`` → ``(logits (K, B, S, V), caches)``
+    * ``mix_decode(stacked, caches, tok, pos, weights)`` →
+      ``(Eq. 27 mixed probabilities (B, V), new caches)`` — ONE vmapped
+      ``decode_step`` over the K dim with the mixing fused into the jit.
+    """
+    stacked, param_axes = stack_experts_for_decode(expert_params)
+    cache_axes = stacked_cache_axes(model.cache_shapes(1, cache_len))
+
+    def prefill_all(stacked_p, batch):
+        return jax.vmap(
+            lambda p: model.prefill(p, batch, cache_len,
+                                    use_kernel=use_kernel),
+            in_axes=(param_axes,), out_axes=(0, cache_axes))(stacked_p)
+
+    def mix_decode(stacked_p, caches, tok, pos, weights):
+        logits, caches = jax.vmap(
+            lambda p, c: model.decode_step(p, c, tok, pos,
+                                           use_kernel=use_kernel),
+            in_axes=(param_axes, cache_axes),
+            out_axes=(0, cache_axes))(stacked_p, caches)      # (K, B, V)
+        return mix_expert_logits(logits, weights), caches
+
+    return stacked, param_axes, jax.jit(prefill_all), jax.jit(mix_decode)
 
 
 def select_expert_params(stacked_params, expert_idx: Array):

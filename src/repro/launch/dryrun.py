@@ -42,6 +42,15 @@ from repro.train.trainer import (TrainConfig, make_decentralized_train_step,
 LONG_DECODE_WINDOW = 8192      # sliding window applied at long_500k
 
 
+def _cost_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on recent JAX but a
+    one-element list of dicts on older releases — normalize to a dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def shape_cfg(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
     """long_500k needs sub-quadratic attention: window the attention archs
     (xLSTM has none; whisper is skipped upstream)."""
@@ -240,7 +249,7 @@ def run_case(arch: str, shape_name: str, mesh_name: str, mode: str,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:
@@ -302,7 +311,7 @@ def run_probe(arch: str, shape_name: str, mesh_name: str, mode: str,
             arch, shape_name, mesh_name, mode, n_experts, depth_probe=G)
         with mesh:
             compiled = jfn.lower(*args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled)
         csum = collective_summary(compiled.as_text(), pod_size=256)
         meas[G] = {"flops": float(cost.get("flops", 0.0)),
                    "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -1,12 +1,19 @@
-"""Serving launcher — decentralized ensemble inference (paper §5.2).
+"""Serving launcher — decentralized continuous batching (paper §5.2).
 
 Loads the per-expert checkpoints + the centroid router written by
-launch/train.py and serves a batch of synthetic multimodal requests:
-route on frozen-encoder features (Eq. 28, top-k filter) → decode with the
-selected expert(s). Reports routing fidelity and per-request stats.
+launch/train.py and serves a stream of synthetic multimodal requests through
+the ``DecentralizedSlotServer``: the Eq. 28 router runs at the front end on
+each request's frozen-encoder features and either dispatches it to its
+top-1 expert pod (grouped, compute-matched) or admits it into the stacked-
+expert mixture core (one vmapped decode step over all K experts, Eq. 27
+mixing fused in). Slots turn over continuously, so short requests never
+wait for long ones. Reports routing fidelity and throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --run /tmp/repro_run \
-        --arch qwen3_8b --requests 16 --new-tokens 24
+        --arch qwen3_8b --requests 16 --new-tokens 24 --slots 8
+
+``--engine batch`` falls back to the whole-batch ``DecentralizedServer``
+(lockstep generation, supports temperature sampling).
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from repro.core.router import CentroidRouter, RouterConfig
 from repro.data.synthetic import SyntheticConfig, SyntheticMultimodal
 from repro.models import build_model
 from repro.serve.ensemble_engine import DecentralizedServer
+from repro.serve.scheduler import DecentralizedSlotServer, Request
 
 
 def main() -> None:
@@ -34,9 +42,15 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--top-k", type=int, default=1)
-    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="batch engine only; the slot engine is greedy")
     ap.add_argument("--strategy", choices=["top1", "mixture"],
                     default="top1")
+    ap.add_argument("--engine", choices=["slots", "batch"], default="slots")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="cache slots per pod (slot engine)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -61,26 +75,35 @@ def main() -> None:
     corpus = SyntheticMultimodal(SyntheticConfig(
         vocab=args.vocab, seq_len=args.prompt_len, seed=args.seed + 7))
     batch_np = corpus.sample_batch(args.requests, step=123)
-    batch = {
-        "tokens": jnp.asarray(batch_np["tokens"]),
-        "labels": jnp.asarray(batch_np["labels"]),
-        "features": jnp.asarray(batch_np["features"]),
-    }
+    cache_len = args.prompt_len + args.new_tokens + 1
+    routed = np.asarray(router.top1(jnp.asarray(batch_np["features"])))
 
-    server = DecentralizedServer(
-        model, experts, router,
-        cache_len=args.prompt_len + args.new_tokens + 1)
-
-    routed = np.asarray(router.top1(batch["features"]))
     t0 = time.time()
-    if args.strategy == "top1":
-        out = server.generate_top1(batch, args.new_tokens,
-                                   jax.random.PRNGKey(args.seed),
-                                   args.temperature)
+    if args.engine == "slots":
+        queue = [Request(rid=i, tokens=batch_np["tokens"][i],
+                         max_new=args.new_tokens,
+                         features=batch_np["features"][i])
+                 for i in range(args.requests)]
+        server = DecentralizedSlotServer(
+            model, experts, router, n_slots=args.slots, cache_len=cache_len,
+            strategy=args.strategy, use_kernel=args.use_kernel)
+        finished = server.serve(queue)
+        out = np.stack([np.asarray(finished[i], dtype=np.int32)
+                        for i in range(args.requests)])
     else:
-        out = np.asarray(server.generate_mixture(
-            batch, args.new_tokens, jax.random.PRNGKey(args.seed),
-            args.temperature))
+        batch = {
+            "tokens": jnp.asarray(batch_np["tokens"]),
+            "labels": jnp.asarray(batch_np["labels"]),
+            "features": jnp.asarray(batch_np["features"]),
+        }
+        server = DecentralizedServer(model, experts, router,
+                                     cache_len=cache_len,
+                                     use_kernel=args.use_kernel)
+        gen = (server.generate_top1 if args.strategy == "top1"
+               else server.generate_mixture)
+        out = np.asarray(gen(batch, args.new_tokens,
+                             jax.random.PRNGKey(args.seed),
+                             args.temperature))
     dt = time.time() - t0
 
     per_expert = np.bincount(routed, minlength=len(experts))
@@ -95,7 +118,10 @@ def main() -> None:
     print(json.dumps({
         "requests": args.requests,
         "new_tokens": args.new_tokens,
+        "engine": args.engine,
         "strategy": args.strategy,
+        "slots": args.slots if args.engine == "slots" else None,
+        "use_kernel": args.use_kernel,
         "wall_s": round(dt, 2),
         "tok_per_s": round(args.requests * args.new_tokens / dt, 1),
         "requests_per_expert": per_expert.tolist(),
@@ -104,7 +130,7 @@ def main() -> None:
     for i in range(min(4, args.requests)):
         print(f"req {i} → expert {routed[i]}: "
               f"prompt={batch_np['tokens'][i, :8].tolist()}… "
-              f"gen={np.asarray(out)[i, :12].tolist()}…")
+              f"gen={out[i, :12].tolist()}…")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 """Model zoo: dense GQA, MoE, encoder-decoder audio, VLM, xLSTM, Mamba2
 hybrid — assembled by family in ``model.build_model``."""
-from .model import Model, build_model
+from .model import CacheSpec, Model, build_model
 
-__all__ = ["Model", "build_model"]
+__all__ = ["CacheSpec", "Model", "build_model"]

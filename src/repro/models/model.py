@@ -75,6 +75,40 @@ def scan_layers(body, carry, xs, cfg: ModelConfig):
     return carry, stacked
 
 
+@dataclass(frozen=True)
+class CacheSpec:
+    """Layout descriptor for a model family's decode cache.
+
+    ``batch_axes`` is a pytree with the same structure as the cache whose
+    leaves give the index of the request/slot (batch) axis in the matching
+    cache leaf — e.g. attention KV caches are (L, B, S, KV, dh) → 1, Mamba2
+    states are (G, gm, B, ...) → 2. Slot servers use it to splice one
+    request's prefill state into a batched cache without knowing the family.
+    """
+    batch_axes: Any
+
+    def shifted(self, by: int = 1) -> "CacheSpec":
+        """Spec for the same cache with ``by`` extra dims inserted before
+        every batch axis (e.g. the stacked-expert K dim of the mixture
+        decode core, which sits after each leaf's scan dim)."""
+        return CacheSpec(jax.tree.map(lambda a: a + by, self.batch_axes))
+
+    def insert(self, cache, row_cache, slot: int):
+        """Write a single-request cache (batch extent 1 on each leaf's batch
+        axis) into ``cache`` at slot index ``slot``."""
+        return jax.tree.map(
+            lambda full, row, ax: jax.lax.dynamic_update_slice_in_dim(
+                full, row.astype(full.dtype), slot, axis=ax),
+            cache, row_cache, self.batch_axes)
+
+    def take(self, cache, slot: int):
+        """Read one slot's cache back out (batch extent 1 preserved)."""
+        return jax.tree.map(
+            lambda full, ax: jax.lax.dynamic_slice_in_dim(full, slot, 1,
+                                                          axis=ax),
+            cache, self.batch_axes)
+
+
 @dataclass
 class Model:
     cfg: ModelConfig
@@ -323,6 +357,23 @@ class Model:
 
     def cache_shapes(self, batch: int, cache_len: int):
         return self._cache_struct(batch, cache_len, as_shape=True)
+
+    def cache_spec(self) -> CacheSpec:
+        """Batch-axis descriptor matching ``_cache_struct``'s layouts."""
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "moe"):
+            axes = {"k": 1, "v": 1}
+        elif cfg.family == "audio":
+            axes = {"k": 1, "v": 1, "xk": 1, "xv": 1}
+        elif cfg.family == "ssm":
+            axes = {"mlstm": 2,
+                    "slstm": tuple(1 for _ in
+                                   ssm_lib.slstm_state_shapes(cfg, 1))}
+        elif cfg.family == "hybrid":
+            axes = {"ssm": 2, "conv": 2, "k": 1, "v": 1}
+        else:
+            raise ValueError(cfg.family)
+        return CacheSpec(axes)
 
     # ------------------------------------------------------------------
     # Prefill: full sequence forward + decode state construction

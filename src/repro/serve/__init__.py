@@ -1,3 +1,8 @@
 from .engine import ServeEngine, serve_step_fn
 from .ensemble_engine import DecentralizedServer
-from .scheduler import Request, SlotServer
+from .scheduler import (DecentralizedSlotServer, MixtureSlotServer, Request,
+                        SlotServer)
+
+__all__ = ["DecentralizedServer", "DecentralizedSlotServer",
+           "MixtureSlotServer", "Request", "ServeEngine", "SlotServer",
+           "serve_step_fn"]

@@ -7,9 +7,13 @@ parameter-free centroid router runs at the front end on the request's frozen
 * ``grouped_top1`` — the paper's main (compute-matched) setting: requests
   are grouped by their routed expert and each group is decoded by exactly
   one expert (host-side dispatcher, per-expert engines).
-* ``mixture`` — the general top-k path: run the top-k experts and mix their
-  next-token *probabilities* with the renormalized router weights — the
-  exact Eq. 27 recomposition (validated against the theory tests).
+* ``mixture`` — the general top-k path: expert parameters are stacked on a
+  K (``dexpert``) dim (decode layout: K after each scanned stack's layer
+  dim, transpose-free) and ONE jitted step vmaps ``decode_step`` over
+  it with the exact Eq. 27 probability mixture (``mix_expert_logits``)
+  fused in — no per-expert Python loop in the hot path. With the dexpert
+  dim sharded over the ``pod`` mesh axis (sharding/rules.py) each expert's
+  slice of the step runs on its own pod.
 """
 from __future__ import annotations
 
@@ -20,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ensemble import mix_expert_logits
+from repro.core.ensemble import (PROB_FLOOR, make_stacked_serving,
+                                 mix_expert_logits)
 from repro.core.router import CentroidRouter
 from repro.models.model import Model
 from .engine import ServeEngine
@@ -39,6 +44,22 @@ class DecentralizedServer:
     def __post_init__(self):
         self.engine = ServeEngine(self.model, self.cache_len,
                                   use_kernel=self.use_kernel)
+        self._core = None        # stacked decode core, built on first use
+        self._mix = jax.jit(mix_expert_logits)
+
+    def _stacked_core(self):
+        """Lazily build the stacked-expert core — the top-1 path never pays
+        the K× stacked-parameter copy."""
+        if self._core is None:
+            stacked, axes, prefill_all, mix_decode = make_stacked_serving(
+                self.model, self.expert_params, self.cache_len,
+                use_kernel=self.use_kernel)
+            model, use_kernel = self.model, self.use_kernel
+            forward_all = jax.jit(lambda sp, batch: jax.vmap(
+                lambda p: model.forward(p, batch, use_kernel=use_kernel),
+                in_axes=(axes,))(sp))
+            self._core = (stacked, prefill_all, mix_decode, forward_all)
+        return self._core
 
     @property
     def K(self) -> int:
@@ -75,50 +96,41 @@ class DecentralizedServer:
         return out
 
     # ------------------------------------------------------------------
-    # mixture (general top-k, exact Eq. 27)
+    # mixture (general top-k, exact Eq. 27, stacked-vmap decode core)
     # ------------------------------------------------------------------
 
     def mixture_next_probs(self, batch: Dict[str, Array]) -> Array:
-        """Run every expert's prefill and mix last-position distributions.
-        Returns (B, V) ensemble next-token probabilities."""
+        """Stacked prefill over every expert + mix last-position
+        distributions. Returns (B, V) ensemble next-token probabilities."""
         weights = self.route(batch["features"])               # (B, K)
         sub = {k: v for k, v in batch.items() if k != "features"}
-        last_logits = []
-        for params in self.expert_params:
-            logits, _ = self.engine.prefill(params, sub)
-            last_logits.append(logits[:, -1])
-        stacked = jnp.stack(last_logits)                      # (K, B, V)
-        return mix_expert_logits(stacked, weights)
+        stacked, prefill_all, _, _ = self._stacked_core()
+        logits, _ = prefill_all(stacked, sub)
+        return self._mix(logits[:, :, -1], weights)           # (K,B,V)→(B,V)
 
     def generate_mixture(self, batch: Dict[str, Array], n_new: int, key,
                          temperature: float = 1.0) -> Array:
-        """Top-k mixture decoding: every kept expert decodes in lockstep and
-        distributions are mixed each step."""
+        """Top-k mixture decoding: ONE vmapped decode step over the stacked
+        expert params per token, mixture fused into the jitted step."""
         weights = self.route(batch["features"])               # (B, K)
         sub = {k: v for k, v in batch.items() if k != "features"}
-        states = []
-        for params in self.expert_params:
-            logits, cache = self.engine.prefill(params, sub)
-            states.append((logits[:, -1], cache))
-        prompt_len = sub["tokens"].shape[1] + (
-            self.model.cfg.n_patches if self.model.cfg.family == "vlm" else 0)
+        stacked, prefill_all, mix_decode, _ = self._stacked_core()
+        logits, caches = prefill_all(stacked, sub)
+        probs = self._mix(logits[:, :, -1], weights)          # (B, V)
+        prompt_len = logits.shape[2]
         out = []
         for i in range(n_new):
-            probs = mix_expert_logits(
-                jnp.stack([s[0] for s in states]), weights)   # (B, V)
             key, sk = jax.random.split(key)
             if temperature == 0:
                 tok = jnp.argmax(probs, axis=-1).astype(jnp.int32)
             else:
-                logp = jnp.log(jnp.maximum(probs, 1e-30)) / temperature
+                logp = jnp.log(jnp.maximum(probs, PROB_FLOOR)) / temperature
                 tok = jax.random.categorical(sk, logp, -1).astype(jnp.int32)
             out.append(tok)
             if i == n_new - 1:
                 break
-            states = [
-                self.engine.decode_step(p, c, tok, prompt_len + i)
-                for p, (_, c) in zip(self.expert_params,
-                                     [(s[0], s[1]) for s in states])]
+            probs, caches = mix_decode(
+                stacked, caches, tok, prompt_len + i, weights)
         return jnp.stack(out, axis=1)
 
     def ensemble_eval_nll(self, batch: Dict[str, Array]) -> Array:
@@ -126,11 +138,11 @@ class DecentralizedServer:
         the metric the parity benchmarks report."""
         weights = self.route(batch["features"])               # (B, K)
         sub = {k: v for k, v in batch.items() if k != "features"}
-        all_logits = jnp.stack([self.model.forward(p, sub)
-                                for p in self.expert_params])  # (K,B,S,V)
-        probs = mix_expert_logits(
+        stacked, _, _, forward_all = self._stacked_core()
+        all_logits = forward_all(stacked, sub)                # (K,B,S,V)
+        probs = self._mix(
             all_logits, weights[:, None, :].repeat(all_logits.shape[2], 1))
-        logp = jnp.log(jnp.maximum(probs, 1e-30))
+        logp = jnp.log(jnp.maximum(probs, PROB_FLOOR))
         labels = sub["labels"]
         nll = -jnp.take_along_axis(logp[:, :-1], labels[:, 1:, None],
                                    axis=-1)[..., 0]

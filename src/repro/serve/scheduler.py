@@ -1,26 +1,40 @@
-"""Continuous batching: a slot-based request scheduler over one decode
-engine (vLLM-style, minus paging — slots are fixed-length cache rows).
+"""Continuous batching: slot-based request schedulers over the decode core
+(vLLM-style, minus paging — slots are fixed-length cache rows).
 
-Requests arrive with different prompt lengths and budgets; the server
-admits each into a free slot (single-row prefill, inserted into the batch
-cache at the slot index), decodes ALL active slots in lockstep with a
-per-slot position vector, and retires finished requests — so new work
-never waits for the longest running request.
+Requests arrive with different prompt lengths and budgets; a server admits
+each into a free slot (single-row prefill, inserted into the batched cache
+at the slot index via the model's ``CacheSpec``), decodes ALL active slots
+in lockstep with a per-slot position vector, and retires finished requests —
+so new work never waits for the longest running request.
 
-v1 scope: attention-cache families (dense / moe / vlm) — their cache
-layout is {k, v}: (L, B, S, KV, dh) with the slot (batch) dim at index 1.
-In the decentralized deployment each expert pod runs one SlotServer and
-the front-end router (Eq. 28) assigns requests to pods.
+Every cache family is supported: the model's cache descriptor says where
+each cache leaf's slot axis lives, so the same admission/step machinery
+drives attention KV rings (dense/moe/vlm), enc-dec cross-attention caches
+(audio), and recurrent states (ssm/hybrid).
+
+The decentralized deployment (paper §5.2) is ``DecentralizedSlotServer``:
+the parameter-free centroid router (Eq. 28) runs at the front end on each
+request's frozen-encoder features and either
+
+* dispatches the request to its top-1 expert's pod — one ``SlotServer`` per
+  expert, the paper's compute-matched setting — or
+* admits it into the stacked-expert mixture core (``MixtureSlotServer``):
+  expert parameters carry a stacked K (``dexpert``) dim in the decode
+  layout (K after each scanned stack's layer dim — transpose-free for the
+  scan), one jitted decode step vmaps over it and fuses the Eq. 27
+  probability mixture, so the top-k path is a single sharded op instead of
+  K sequential engine calls.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ensemble import make_stacked_serving, mix_expert_logits
 from repro.models.model import Model
 
 Array = jnp.ndarray
@@ -31,29 +45,34 @@ class Request:
     rid: int
     tokens: np.ndarray            # (prompt_len,) int32
     max_new: int
+    features: Optional[np.ndarray] = None   # frozen-encoder routing features
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+    #                             # unbatched modality inputs: "patches"
+    #                             # (vlm), "frames" (audio)
     out: List[int] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new
 
+    def batch(self) -> Dict[str, Array]:
+        """Single-row prefill batch (tokens + modality extras)."""
+        b = {"tokens": jnp.asarray(self.tokens[None, :]),
+             "labels": jnp.zeros((1, len(self.tokens)), jnp.int32)}
+        for name, v in self.extras.items():
+            b[name] = jnp.asarray(np.asarray(v)[None])
+        return b
 
-class SlotServer:
-    def __init__(self, model: Model, params, n_slots: int, cache_len: int):
-        assert model.cfg.family in ("dense", "moe", "vlm"), \
-            "v1 slot server supports attention-cache families"
-        self.model, self.params = model, params
+
+class _SlotTable:
+    """Slot bookkeeping + the continuous-admission drive loop shared by the
+    single-engine and stacked-mixture servers."""
+
+    def __init__(self, n_slots: int, cache_len: int):
         self.n_slots, self.cache_len = n_slots, cache_len
-        self.cache = model.init_cache(n_slots, cache_len)
         self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.last_tok = np.zeros(n_slots, dtype=np.int32)
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_len))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(p, c, t, pos))
-
-    # ------------------------------------------------------------------
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -63,48 +82,31 @@ class SlotServer:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
     def admit(self, req: Request) -> bool:
-        """Prefill the request alone and insert its KV rows at a free slot."""
-        free = self.free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        batch = {"tokens": jnp.asarray(req.tokens[None, :]),
-                 "labels": jnp.zeros((1, len(req.tokens)), jnp.int32)}
-        logits, row_cache = self._prefill(self.params, batch)
-        # greedy first token from the prompt's last position
-        first = int(jnp.argmax(logits[0, -1]))
-        req.out.append(first)
-        self.cache = jax.tree.map(
-            lambda full, row: jax.lax.dynamic_update_slice_in_dim(
-                full, row.astype(full.dtype), slot, axis=1),
-            self.cache, row_cache)
-        self.slot_req[slot] = req
-        self.pos[slot] = len(req.tokens)
-        self.last_tok[slot] = first
-        return True
+        raise NotImplementedError
 
     def step(self) -> List[Request]:
-        """One lockstep decode over every active slot. Returns requests
-        retired this step."""
-        act = self.active
-        if not act:
-            return []
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_tok),
-            jnp.asarray(self.pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        raise NotImplementedError
+
+    def _occupy(self, slot: int, req: Request, first_tok: int,
+                prompt_len: int) -> None:
+        req.out.append(first_tok)
+        self.slot_req[slot] = req
+        self.pos[slot] = prompt_len
+        self.last_tok[slot] = first_tok
+
+    def _advance(self, next_tok: np.ndarray) -> List[Request]:
+        """Record one decoded token per active slot; retire finished
+        requests. next_tok: (n_slots,) int32 (inactive rows ignored)."""
         retired = []
-        for slot in act:
+        for slot in self.active:
             req = self.slot_req[slot]
-            req.out.append(int(nxt[slot]))
+            req.out.append(int(next_tok[slot]))
             self.pos[slot] += 1
-            self.last_tok[slot] = nxt[slot]
+            self.last_tok[slot] = next_tok[slot]
             if req.done or self.pos[slot] >= self.cache_len - 1:
                 retired.append(req)
                 self.slot_req[slot] = None
         return retired
-
-    # ------------------------------------------------------------------
 
     def serve(self, queue: List[Request], *, max_steps: int = 10_000
               ) -> Dict[int, List[int]]:
@@ -118,4 +120,181 @@ class SlotServer:
                 break
             for req in self.step():
                 finished[req.rid] = req.out
+        leftover = [r.rid for r in pending] + \
+            [r.rid for r in self.slot_req if r is not None]
+        if leftover:
+            raise RuntimeError(
+                f"serve() exhausted max_steps={max_steps} with requests "
+                f"{leftover} unfinished — raise max_steps or shrink budgets")
         return finished
+
+
+def make_serve_fns(model: Model, cache_len: int, *,
+                   use_kernel: bool = False):
+    """The jitted (prefill, decode) pair one SlotServer runs on. Params are
+    an explicit argument, so pods serving different experts of the same
+    model SHARE one pair (one trace/compile instead of K)."""
+    prefill = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len, use_kernel=use_kernel))
+    decode = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                               use_kernel=use_kernel))
+    return prefill, decode
+
+
+class SlotServer(_SlotTable):
+    """Continuous batching over ONE expert / model (greedy decoding)."""
+
+    def __init__(self, model: Model, params, n_slots: int, cache_len: int,
+                 *, use_kernel: bool = False, serve_fns=None):
+        super().__init__(n_slots, cache_len)
+        self.model, self.params = model, params
+        self.use_kernel = use_kernel
+        self.cache = model.init_cache(n_slots, cache_len)
+        self.spec = model.cache_spec()
+        self._prefill, self._decode = serve_fns or make_serve_fns(
+            model, cache_len, use_kernel=use_kernel)
+
+    def admit(self, req: Request) -> bool:
+        """Prefill the request alone and insert its decode state at a free
+        slot."""
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        logits, row_cache = self._prefill(self.params, req.batch())
+        # greedy first token from the prompt's last position
+        first = int(jnp.argmax(logits[0, -1]))
+        self.cache = self.spec.insert(self.cache, row_cache, slot)
+        # logits width = positions consumed (incl. any image prefix)
+        self._occupy(slot, req, first, logits.shape[1])
+        return True
+
+    def step(self) -> List[Request]:
+        """One lockstep decode over every active slot. Returns requests
+        retired this step."""
+        if not self.active:
+            return []
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        return self._advance(nxt)
+
+
+class MixtureSlotServer(_SlotTable):
+    """Continuous batching over the STACKED expert ensemble: one cache
+    carrying the expert (K) dim, one jitted vmapped decode step with the
+    Eq. 27 mixture fused in, per-slot router weights fixed at admission."""
+
+    def __init__(self, model: Model, expert_params: List[Any], router,
+                 n_slots: int, cache_len: int, *, use_kernel: bool = False):
+        super().__init__(n_slots, cache_len)
+        self.model, self.router = model, router
+        self.K = len(expert_params)
+        self.use_kernel = use_kernel
+        self.stacked, _, self._prefill_all, self._mix_decode = \
+            make_stacked_serving(model, expert_params, cache_len,
+                                 use_kernel=use_kernel)
+        # expert (K) dim at axis 1, AFTER each leaf's scan dim — the layout
+        # the vmapped scanned decode consumes without per-step transposes
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape[:1] + (self.K,) + s.shape[1:],
+                                s.dtype),
+            model.cache_shapes(n_slots, cache_len))
+        self.spec = model.cache_spec().shifted(1)   # batch axes move by 1
+        self.weights = np.zeros((n_slots, self.K), dtype=np.float32)
+        self._mix = jax.jit(mix_expert_logits)
+
+    def admit(self, req: Request) -> bool:
+        free = self.free_slots()
+        if not free:
+            return False
+        if req.features is None:
+            raise ValueError("mixture admission routes on request features")
+        slot = free[0]
+        w = self.router.route(jnp.asarray(req.features[None]))    # (1, K)
+        logits, row_cache = self._prefill_all(self.stacked, req.batch())
+        probs = self._mix(logits[:, :, -1], w)                    # (1, V)
+        first = int(jnp.argmax(probs[0]))
+        self.cache = self.spec.insert(self.cache, row_cache, slot)
+        self.weights[slot] = np.asarray(w[0])
+        self._occupy(slot, req, first, logits.shape[2])
+        return True
+
+    def step(self) -> List[Request]:
+        if not self.active:
+            return []
+        probs, self.cache = self._mix_decode(
+            self.stacked, self.cache, jnp.asarray(self.last_tok),
+            jnp.asarray(self.pos), jnp.asarray(self.weights))
+        nxt = np.asarray(jnp.argmax(probs, axis=-1), dtype=np.int32)
+        return self._advance(nxt)
+
+
+class DecentralizedSlotServer:
+    """Front-end centroid router over continuously-batched expert pods.
+
+    strategy="top1"    — grouped top-1 (compute-matched): one ``SlotServer``
+                         per expert pod; each request decodes on exactly the
+                         expert the router assigns it.
+    strategy="mixture" — general top-k: the stacked-expert mixture core.
+    """
+
+    def __init__(self, model: Model, expert_params: List[Any], router,
+                 n_slots: int, cache_len: int, *, strategy: str = "top1",
+                 use_kernel: bool = False):
+        assert strategy in ("top1", "mixture"), strategy
+        self.model, self.router = model, router
+        self.K = len(expert_params)
+        self.strategy = strategy
+        if strategy == "top1":
+            fns = make_serve_fns(model, cache_len, use_kernel=use_kernel)
+            self.pods = [SlotServer(model, p, n_slots, cache_len,
+                                    use_kernel=use_kernel, serve_fns=fns)
+                         for p in expert_params]
+        else:
+            self.core = MixtureSlotServer(model, expert_params, router,
+                                          n_slots, cache_len,
+                                          use_kernel=use_kernel)
+
+    def route(self, queue: List[Request]) -> np.ndarray:
+        feats = np.stack([r.features for r in queue])
+        return np.asarray(self.router.top1(jnp.asarray(feats)))
+
+    def serve(self, queue: List[Request], *, max_steps: int = 10_000
+              ) -> Dict[int, List[int]]:
+        if not queue:
+            return {}
+        if self.strategy == "mixture":
+            return self.core.serve(queue, max_steps=max_steps)
+        expert_of = self.route(queue)
+        pending: List[List[Request]] = [[] for _ in range(self.K)]
+        for req, k in zip(queue, expert_of):
+            pending[int(k)].append(req)
+        finished: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            idle = True
+            for k, pod in enumerate(self.pods):
+                while pending[k] and pod.free_slots():
+                    pod.admit(pending[k].pop(0))
+                if pod.active or pending[k]:
+                    idle = False
+                for req in pod.step():
+                    finished[req.rid] = req.out
+            if idle:
+                break
+        leftover = [r.rid for reqs in pending for r in reqs] + \
+            [r.rid for pod in self.pods for r in pod.slot_req
+             if r is not None]
+        if leftover:
+            raise RuntimeError(
+                f"serve() exhausted max_steps={max_steps} with requests "
+                f"{leftover} unfinished — raise max_steps or shrink budgets")
+        return finished
+
+    def occupancy(self) -> List[int]:
+        """Active slots per pod (top-1) or in the mixture core."""
+        if self.strategy == "mixture":
+            return [len(self.core.active)]
+        return [len(p.active) for p in self.pods]

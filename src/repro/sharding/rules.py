@@ -87,6 +87,28 @@ def data_shardings(rules, mesh: Mesh, cfg, kind: str,
     return shardings
 
 
+def stacked_cache_pspec_tree(stacked_cache_shapes, rules, mesh: Mesh):
+    """Shardings for the stacked-expert decode core's cache: every leaf
+    carries the K (``dexpert``) dim at axis 1 — after its scan dim, the
+    transpose-free layout of ``core/ensemble.stack_experts_for_decode`` —
+    sharded over ``pod`` under the decentralized rules, with the per-expert
+    remainder placed exactly as ``cache_pspec_tree`` places the unstacked
+    cache. This makes the vmapped mixture ``decode_step`` one SPMD op whose
+    expert slices stay on their own pods (the serving analogue of
+    zero-communication training)."""
+    import jax
+
+    def strip(s):
+        return jax.ShapeDtypeStruct(s.shape[:1] + s.shape[2:], s.dtype)
+
+    inner = cache_pspec_tree(jax.tree.map(strip, stacked_cache_shapes),
+                             rules, mesh)
+    return jax.tree.map(
+        lambda ns: NamedSharding(
+            mesh, P(ns.spec[0] if len(ns.spec) else None,
+                    rules["dexpert"], *ns.spec[1:])), inner)
+
+
 def cache_pspec_tree(cache_shapes, rules, mesh: Mesh):
     """KV-cache / recurrent-state shardings: batch over data, heads over
     model when divisible. Cache layouts all carry the layer/group dim first

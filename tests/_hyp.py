@@ -1,0 +1,57 @@
+"""Hypothesis import shim: property tests degrade to deterministic
+pseudo-random sampling when ``hypothesis`` is not installed (the seed
+container ships without it; ``pip install -e .[test]`` restores the real
+thing).
+
+The fallback implements exactly the surface the test modules use —
+``@settings(max_examples=..., deadline=None)`` over ``@given(**strategies)``
+with ``st.integers`` / ``st.sampled_from`` — drawing each example from a
+fixed-seed ``random.Random`` so failures reproduce.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see a zero-argument
+            # signature, not the strategy parameters (it would look for
+            # fixtures named after them).
+            def run():
+                n = getattr(run, "_max_examples", 10)
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    fn(**drawn)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.hypothesis_fallback = True
+            return run
+        return deco
+
+    def settings(max_examples: int = 10, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

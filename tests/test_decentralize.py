@@ -2,7 +2,7 @@
 generating velocity and the router-weighted sum of expert velocities."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

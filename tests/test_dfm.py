@@ -5,7 +5,7 @@ and the sampling rule can be checked to machine precision.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,13 +1,62 @@
-"""Continuous batching correctness: lockstep slot decoding with mixed
-prompt lengths must reproduce per-request sequential greedy decoding."""
+"""Continuous batching correctness.
+
+* Lockstep slot decoding with mixed prompt lengths must reproduce
+  per-request sequential greedy decoding — for EVERY cache family (the
+  model's CacheSpec descriptor drives admission generically).
+* The stacked-vmap mixture decode core must match the per-expert-loop
+  reference token-for-token / to numerical tolerance.
+* The decentralized slot server (router front end) must agree with the
+  per-expert engines it composes.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import get_smoke_config
+from repro.core.ensemble import mix_expert_logits
+from repro.core.router import CentroidRouter, RouterConfig
 from repro.models import build_model
 from repro.serve.engine import ServeEngine
-from repro.serve.scheduler import Request, SlotServer
+from repro.serve.ensemble_engine import DecentralizedServer
+from repro.serve.scheduler import (DecentralizedSlotServer, Request,
+                                   SlotServer)
+
+FAMILY_ARCHS = [
+    ("qwen3_8b", "dense"),
+    ("deepseek_moe_16b", "moe"),
+    ("internvl2_2b", "vlm"),
+    ("whisper_small", "audio"),
+    ("xlstm_125m", "ssm"),
+    ("zamba2_2_7b", "hybrid"),
+]
+
+
+def make_requests(cfg, lens, budgets, seed=42):
+    """Deterministic request queue with per-family modality extras."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, (n, m) in enumerate(zip(lens, budgets)):
+        extras = {}
+        if cfg.family == "vlm":
+            extras["patches"] = rng.normal(
+                size=(cfg.n_patches, cfg.vision_dim)).astype(np.float32)
+        if cfg.family == "audio":
+            extras["frames"] = rng.normal(
+                size=(cfg.n_audio_frames, cfg.audio_dim)).astype(np.float32)
+        reqs.append(Request(i, rng.integers(0, cfg.vocab, size=n)
+                            .astype(np.int32), m, extras=extras))
+    return reqs
+
+
+def engine_greedy(engine, params, req):
+    batch = {"tokens": jnp.asarray(req.tokens[None, :]),
+             "labels": jnp.zeros((1, len(req.tokens)), jnp.int32)}
+    for name, v in req.extras.items():
+        batch[name] = jnp.asarray(np.asarray(v)[None])
+    toks = engine.generate(params, batch, req.max_new, jax.random.PRNGKey(1),
+                           temperature=0.0)
+    return np.asarray(toks)[0].tolist()
 
 
 def test_slot_server_matches_sequential_greedy():
@@ -25,11 +74,7 @@ def test_slot_server_matches_sequential_greedy():
     engine = ServeEngine(model, cache_len)
     want = {}
     for rid, (p, m) in enumerate(zip(prompts, budgets)):
-        batch = {"tokens": jnp.asarray(p[None, :]),
-                 "labels": jnp.zeros((1, len(p)), jnp.int32)}
-        toks = engine.generate(params, batch, m, jax.random.PRNGKey(1),
-                               temperature=0.0)
-        want[rid] = np.asarray(toks)[0].tolist()
+        want[rid] = engine_greedy(engine, params, Request(rid, p, m))
 
     # continuous batching with only 2 slots for 5 requests
     server = SlotServer(model, params, n_slots=2, cache_len=cache_len)
@@ -40,6 +85,29 @@ def test_slot_server_matches_sequential_greedy():
     assert set(got) == set(want)
     for rid in want:
         assert got[rid] == want[rid], (rid, got[rid], want[rid])
+
+
+@pytest.mark.parametrize("arch,family", FAMILY_ARCHS)
+def test_slot_server_family_parity(arch, family):
+    """Greedy SlotServer.serve must equal ServeEngine.generate(temperature=0)
+    token-for-token for every supported cache family."""
+    cfg = get_smoke_config(arch).reduced(vocab=256)
+    assert cfg.family == family
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_len = 40
+    lens, budgets = (7, 11, 5), (4, 3, 5)
+
+    engine = ServeEngine(model, cache_len)
+    want = {r.rid: engine_greedy(engine, params, r)
+            for r in make_requests(cfg, lens, budgets)}
+
+    server = SlotServer(model, params, n_slots=2, cache_len=cache_len)
+    got = server.serve(make_requests(cfg, lens, budgets))
+    assert set(got) == set(want)
+    for rid in want:
+        assert got[rid] == want[rid], (arch, rid, got[rid], want[rid])
+    assert server.active == []
 
 
 def test_slot_reuse_and_occupancy():
@@ -54,3 +122,155 @@ def test_slot_reuse_and_occupancy():
     assert len(out) == 7
     assert all(len(v) == 3 for v in out.values())
     assert server.active == []            # all slots freed
+
+
+def test_slot_server_use_kernel_parity():
+    """The Pallas decode/prefill kernels (interpret mode on CPU) must be
+    reachable from continuous batching and agree with the jnp path."""
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def queue():
+        return make_requests(cfg, (8, 8), (3, 3), seed=7)
+
+    ref = SlotServer(model, params, n_slots=2, cache_len=16).serve(queue())
+    ker = SlotServer(model, params, n_slots=2, cache_len=16,
+                     use_kernel=True).serve(queue())
+    assert ref == ker
+
+
+# ---------------------------------------------------------------------------
+# Stacked-expert mixture core
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mixture_setup():
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=128)
+    model = build_model(cfg)
+    K, Df, B, S = 3, 16, 4, 10
+    experts = [model.init(jax.random.PRNGKey(k)) for k in range(K)]
+    rng = np.random.default_rng(1)
+    router = CentroidRouter(
+        jnp.asarray(rng.normal(size=(K, Df)), jnp.float32),
+        RouterConfig(top_k=2))
+    toks = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+    feats = rng.normal(size=(B, Df)).astype(np.float32)
+    batch = {"tokens": jnp.asarray(toks),
+             "labels": jnp.zeros((B, S), jnp.int32),
+             "features": jnp.asarray(feats)}
+    return cfg, model, experts, router, toks, feats, batch
+
+
+def looped_mixture_reference(model, experts, router, batch, n_new,
+                             cache_len):
+    """The pre-refactor per-expert Python loop, kept as the oracle."""
+    engine = ServeEngine(model, cache_len)
+    weights = router.route(batch["features"])
+    sub = {k: v for k, v in batch.items() if k != "features"}
+    states = []
+    for p in experts:
+        logits, cache = engine.prefill(p, sub)
+        states.append((logits[:, -1], cache))
+    prompt_len = sub["tokens"].shape[1]
+    out = []
+    for i in range(n_new):
+        probs = mix_expert_logits(jnp.stack([s[0] for s in states]), weights)
+        tok = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        if i == n_new - 1:
+            break
+        states = [engine.decode_step(p, c, tok, prompt_len + i)
+                  for p, (_, c) in zip(experts, states)]
+    return np.asarray(jnp.stack(out, axis=1))
+
+
+def test_stacked_mixture_matches_looped_reference(mixture_setup):
+    """The single vmapped decode step over stacked expert params (mixing
+    fused into the jitted step) must reproduce the sequential per-expert
+    loop exactly."""
+    cfg, model, experts, router, toks, feats, batch = mixture_setup
+    server = DecentralizedServer(model, experts, router, cache_len=24)
+    got = np.asarray(server.generate_mixture(
+        batch, 6, jax.random.PRNGKey(0), temperature=0.0))
+    want = looped_mixture_reference(model, experts, router, batch, 6, 24)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stacked_mixture_probs_match_loop(mixture_setup):
+    cfg, model, experts, router, toks, feats, batch = mixture_setup
+    server = DecentralizedServer(model, experts, router, cache_len=24)
+    got = np.asarray(server.mixture_next_probs(batch))
+    engine = ServeEngine(model, 24)
+    sub = {k: v for k, v in batch.items() if k != "features"}
+    stacked = jnp.stack([engine.prefill(p, sub)[0][:, -1] for p in experts])
+    want = np.asarray(mix_expert_logits(stacked,
+                                        router.route(batch["features"])))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_decentralized_slot_server_grouped_top1(mixture_setup):
+    """Grouped top-1 continuous batching must equal running each request on
+    exactly its routed expert."""
+    cfg, model, experts, router, toks, feats, batch = mixture_setup
+    B = toks.shape[0]
+
+    def queue():
+        return [Request(i, toks[i], 5, features=feats[i]) for i in range(B)]
+
+    server = DecentralizedSlotServer(model, experts, router, n_slots=2,
+                                     cache_len=24, strategy="top1")
+    got = server.serve(queue())
+    expert_of = np.asarray(router.top1(batch["features"]))
+    engine = ServeEngine(model, 24)
+    for i in range(B):
+        want = engine_greedy(engine, experts[int(expert_of[i])],
+                             Request(i, toks[i], 5))
+        assert got[i] == want, (i, got[i], want)
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "zamba2_2_7b", "xlstm_125m"])
+def test_stacked_cache_pspec_layout(arch):
+    """The stacked-cache sharding helper must put the ``dexpert`` (pod)
+    axis at position 1 of every leaf — matching the decode layout — and
+    keep the per-expert remainder's placement."""
+    from jax.sharding import Mesh
+    from repro.sharding.rules import (cache_pspec_tree, logical_rules,
+                                      stacked_cache_pspec_tree)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("pod", "data", "model"))
+    rules = logical_rules(multi_pod=True, decentralized=True)
+    model = build_model(get_smoke_config(arch))
+    K = 2
+    shapes = model.cache_shapes(4, 16)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[:1] + (K,) + s.shape[1:],
+                                       s.dtype), shapes)
+    specs = stacked_cache_pspec_tree(stacked, rules, mesh)
+    inner = cache_pspec_tree(shapes, rules, mesh)
+
+    def check(stacked_ns, inner_ns, leaf):
+        spec = tuple(stacked_ns.spec)
+        spec += (None,) * (len(leaf.shape) - len(spec))
+        assert spec[1] == rules["dexpert"] == "pod", (leaf.shape, spec)
+        want = tuple(inner_ns.spec)
+        want += (None,) * (len(leaf.shape) - 1 - len(want))
+        assert spec[:1] + spec[2:] == want, (leaf.shape, spec, want)
+
+    jax.tree.map(check, specs, inner, stacked)
+
+
+def test_decentralized_slot_server_mixture_matches_batch(mixture_setup):
+    """The stacked mixture slot server (continuous batching) must equal the
+    whole-batch mixture generation when every request fits in a slot."""
+    cfg, model, experts, router, toks, feats, batch = mixture_setup
+    B = toks.shape[0]
+    server = DecentralizedSlotServer(model, experts, router, n_slots=B,
+                                     cache_len=24, strategy="mixture")
+    got = server.serve(
+        [Request(i, toks[i], 5, features=feats[i]) for i in range(B)])
+    ref = DecentralizedServer(model, experts, router, cache_len=24)
+    want = np.asarray(ref.generate_mixture(
+        batch, 5, jax.random.PRNGKey(0), temperature=0.0))
+    for i in range(B):
+        assert got[i] == want[i].tolist(), (i, got[i], want[i])
