@@ -51,6 +51,7 @@ def main() -> None:
         "topk": lambda: topk_ablation.run(s),
         "kernels": lambda: kernels_bench.run(s),
         "serve": lambda: serve_bench.run(s),
+        "serve_paged": lambda: serve_bench.run_paged(s),
         "roofline": lambda: roofline_report.run(s),
     }
     selected = args.only or list(suite)

@@ -1,14 +1,22 @@
-"""Serving microbenchmark: looped vs. stacked mixture decode.
+"""Serving microbenchmarks.
 
-The pre-refactor mixture path ran K sequential ``decode_step`` dispatches
-per token (one per expert pytree) and mixed on the host; the stacked core
-runs ONE jitted step that vmaps over the leading K (``dexpert``) dim with
-``mix_expert_logits`` fused in. This measures decode steps/sec for both at
-K=4 on a smoke model — the stacked path must be at least as fast (on a
-multi-pod mesh it additionally shards the K dim over pods). Note the CPU
-baseline is generous: the K looped dispatches run concurrently via async
-dispatch, so the stacked win here is modest; the structural win (no K×
-per-token dispatch, pod-sharded experts) shows on the TPU mesh.
+1. Looped vs. stacked mixture decode (``run``): the pre-refactor mixture
+   path ran K sequential ``decode_step`` dispatches per token (one per
+   expert pytree) and mixed on the host; the stacked core runs ONE jitted
+   step that vmaps over the leading K (``dexpert``) dim with
+   ``mix_expert_logits`` fused in. This measures decode steps/sec for both
+   at K=4 on a smoke model — the stacked path must be at least as fast (on
+   a multi-pod mesh it additionally shards the K dim over pods). Note the
+   CPU baseline is generous: the K looped dispatches run concurrently via
+   async dispatch, so the stacked win here is modest; the structural win
+   (no K× per-token dispatch, pod-sharded experts) shows on the TPU mesh.
+
+2. Paged vs. contiguous slot serving (``run_paged``): the same request
+   queue served by the fixed-row ``SlotServer`` and the block-table paged
+   one — asserts token-for-token greedy parity, then reports throughput
+   and the KV-memory ratio (the paged pool holds half the contiguous
+   rows' worth of blocks here and still serves the queue, because slots
+   only reserve the blocks they actually write).
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from repro.configs.base import get_smoke_config
 from repro.core.ensemble import make_stacked_serving, mix_expert_logits
 from repro.core.router import CentroidRouter, RouterConfig
 from repro.models import build_model
+from repro.serve.scheduler import Request, SlotServer
 
 
 def run(_settings=None, *, K: int = 4, B: int = 32, prompt: int = 16,
@@ -107,5 +116,74 @@ def run(_settings=None, *, K: int = 4, B: int = 32, prompt: int = 16,
     return result
 
 
+def run_paged(_settings=None, *, n_requests: int = 24, n_slots: int = 8,
+              prompt: int = 12, max_new: int = 16, cache_len: int = 64,
+              page_block: int = 8):
+    """Paged-vs-contiguous decode: greedy parity (hard assert) +
+    throughput + KV memory. The pool is provisioned at HALF the contiguous
+    capacity — enough for this load because short-lived requests return
+    their blocks — which is exactly the memory the fixed-row layout cannot
+    give back."""
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=prompt).astype(np.int32)
+               for _ in range(n_requests)]
+
+    def queue():
+        return [Request(i, p, max_new) for i, p in enumerate(prompts)]
+
+    nb_slot = -(-cache_len // page_block)
+    pool_blocks = n_slots * nb_slot // 2 + 1
+
+    def bench(server):
+        t0 = time.perf_counter()
+        out = server.serve(queue())
+        jax.block_until_ready(server.cache)
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in out.values())
+        return out, toks / dt
+
+    from repro.serve.scheduler import make_serve_fns
+    fns_c = make_serve_fns(model, cache_len)
+    fns_p = make_serve_fns(model, cache_len, paged=True)
+
+    def fresh(paged: bool):
+        if paged:
+            return SlotServer(model, params, n_slots=n_slots,
+                              cache_len=cache_len, serve_fns=fns_p,
+                              page_block=page_block,
+                              pool_blocks=pool_blocks)
+        return SlotServer(model, params, n_slots=n_slots,
+                          cache_len=cache_len, serve_fns=fns_c)
+
+    # warm the shared jits outside the timed region
+    bench(fresh(False)), bench(fresh(True))
+    out_c, tps_c = bench(fresh(False))
+    out_p, tps_p = bench(fresh(True))
+    assert out_c == out_p, "paged decode diverged from contiguous"
+
+    kv_rows = n_slots * cache_len                      # contiguous KV slots
+    kv_pool = pool_blocks * page_block                 # paged pool slots
+    result = {
+        "requests": n_requests, "slots": n_slots, "max_new": max_new,
+        "contiguous_tok_per_s": round(tps_c, 2),
+        "paged_tok_per_s": round(tps_p, 2),
+        "paged_over_contiguous": round(tps_p / tps_c, 3),
+        "kv_memory_ratio": round(kv_pool / kv_rows, 3),
+        "parity": True,
+    }
+    print("\n== Serving: contiguous vs paged KV cache ==")
+    print("name,tok_per_s")
+    print(f"slots_contiguous,{tps_c:.2f}")
+    print(f"slots_paged,{tps_p:.2f}")
+    print(f"speedup,{result['paged_over_contiguous']}")
+    print(f"kv_memory_ratio,{result['kv_memory_ratio']}")
+    print("parity,exact")
+    return result
+
+
 if __name__ == "__main__":
     run()
+    run_paged()

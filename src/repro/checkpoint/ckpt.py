@@ -17,13 +17,26 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# Empty containers flatten to a zero-length marker entry (``__E<tag>``) so
+# the pytree STRUCTURE survives the roundtrip — without it ``_flatten``
+# emitted nothing for them and ``load(save(tree))`` silently changed the
+# tree's structure (e.g. an optimizer state with an empty extra-args dict).
+# Factories, not instances: each load must get FRESH containers, or every
+# empty dict/list in every loaded tree would alias one mutable global.
+_EMPTY_FACTORIES = {"__ED": dict, "__EL": list, "__ET": tuple}
+
+
 def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
     out = {}
     if isinstance(tree, dict):
+        if not tree:
+            out[f"{prefix}__ED"] = np.zeros(0, np.int8)
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
     elif isinstance(tree, (tuple, list)):
         tag = "T" if isinstance(tree, tuple) else "L"
+        if not tree:
+            out[f"{prefix}__E{tag}"] = np.zeros(0, np.int8)
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}__{tag}{i}/"))
     else:
@@ -44,6 +57,8 @@ def _unflatten(flat: Dict[str, np.ndarray]):
         if not isinstance(node, dict):
             return jnp.asarray(node)
         keys = list(node.keys())
+        if len(keys) == 1 and keys[0] in _EMPTY_FACTORIES:
+            return _EMPTY_FACTORIES[keys[0]]()
         if keys and all(re.fullmatch(r"__[TL]\d+", k) for k in keys):
             items = sorted(keys, key=lambda k: int(k[3:]))
             seq = [rebuild(node[k]) for k in items]

@@ -112,7 +112,7 @@ def stacked_cache_axes(cache_like):
 
 
 def make_stacked_serving(model, expert_params, cache_len: int, *,
-                         use_kernel: bool = False):
+                         use_kernel: bool = False, paged: bool = False):
     """Build the stacked-expert decode core shared by every mixture server
     (``DecentralizedServer``, ``MixtureSlotServer``, serve_bench): experts
     stacked in the decode layout plus jitted whole-ensemble steps.
@@ -123,8 +123,15 @@ def make_stacked_serving(model, expert_params, cache_len: int, *,
     * ``mix_decode(stacked, caches, tok, pos, weights)`` →
       ``(Eq. 27 mixed probabilities (B, V), new caches)`` — ONE vmapped
       ``decode_step`` over the K dim with the mixing fused into the jit.
+
+    With ``paged`` the caches are the block-pool layout (pool leaves carry
+    the K dim at axis 1, exactly like the direct leaves) and ``mix_decode``
+    takes the per-slot block tables as a trailing argument, shared across
+    all K experts (``in_axes=None`` under the vmap).
     """
     stacked, param_axes = stack_experts_for_decode(expert_params)
+    # axis tree only depends on the cache STRUCTURE (paged and contiguous
+    # caches share it): every leaf carries K at axis 1, after its scan dim
     cache_axes = stacked_cache_axes(model.cache_shapes(1, cache_len))
 
     def prefill_all(stacked_p, batch):
@@ -133,13 +140,22 @@ def make_stacked_serving(model, expert_params, cache_len: int, *,
                                     use_kernel=use_kernel),
             in_axes=(param_axes,), out_axes=(0, cache_axes))(stacked_p)
 
-    def mix_decode(stacked_p, caches, tok, pos, weights):
-        logits, caches = jax.vmap(
-            lambda p, c: model.decode_step(p, c, tok, pos,
-                                           use_kernel=use_kernel),
-            in_axes=(param_axes, cache_axes),
-            out_axes=(0, cache_axes))(stacked_p, caches)      # (K, B, V)
-        return mix_expert_logits(logits, weights), caches
+    if paged:
+        def mix_decode(stacked_p, caches, tok, pos, weights, block_tables):
+            logits, caches = jax.vmap(
+                lambda p, c: model.decode_step_paged(
+                    p, c, tok, pos, block_tables, use_kernel=use_kernel),
+                in_axes=(param_axes, cache_axes),
+                out_axes=(0, cache_axes))(stacked_p, caches)  # (K, B, V)
+            return mix_expert_logits(logits, weights), caches
+    else:
+        def mix_decode(stacked_p, caches, tok, pos, weights):
+            logits, caches = jax.vmap(
+                lambda p, c: model.decode_step(p, c, tok, pos,
+                                               use_kernel=use_kernel),
+                in_axes=(param_axes, cache_axes),
+                out_axes=(0, cache_axes))(stacked_p, caches)  # (K, B, V)
+            return mix_expert_logits(logits, weights), caches
 
     return stacked, param_axes, jax.jit(prefill_all), jax.jit(mix_decode)
 

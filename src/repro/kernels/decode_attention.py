@@ -6,6 +6,17 @@ share a KV head are processed together as a (group, dh) tile — the natural
 GQA layout on the MXU (the group dim rides the sublane axis). Position
 masking (including the ring-buffer validity rule for sliding-window caches)
 is computed from a prefetched per-batch position scalar.
+
+Two cache layouts share the kernel body:
+
+* contiguous — K/V are (B, S, KV, dh) slot rows, the ki-th grid step reads
+  the ki-th sequence block of row b directly;
+* paged — K/V live in a shared (P, block, KV, dh) block pool and the ki-th
+  grid step reads physical block ``block_tables[b, ki]``: the per-slot
+  block table is a scalar-prefetch operand, so the index map resolves the
+  indirection at DMA-issue time and the body never sees it (the classic
+  paged-attention gather). Unallocated table entries point at the reserved
+  scratch block 0 and are killed by the position mask.
 """
 from __future__ import annotations
 
@@ -20,26 +31,19 @@ Array = jnp.ndarray
 NEG_INF = -1e30
 
 
-def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *,
-                   scale: float, block_k: int, window: int, s_cache: int):
-    ki = pl.program_id(2)
-    nk = pl.num_programs(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
+def _accum_block(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, block: int, ki, pos, window: int,
+                 s_cache: int):
+    """Online-softmax accumulation of one KV block — the single source of
+    the masking fence and the m/l/acc rescaling recurrence, shared by the
+    contiguous and paged kernels so their numerics can never diverge."""
     q = q_ref[0, 0, :, :].astype(jnp.float32)          # (group, dh)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dh)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, dv)
-    pos = pos_ref[0]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (block, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (block, dv)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    idx = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    idx = ki * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     if window > 0:
         valid = (idx <= pos) | (pos >= s_cache)        # ring buffer
     else:
@@ -54,6 +58,23 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
     acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     m_scr[...] = m_new
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, window: int, s_cache: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    _accum_block(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, scale=scale,
+                 block=block_k, ki=ki, pos=pos_ref[0], window=window,
+                 s_cache=s_cache)
 
     @pl.when(ki == nk - 1)
     def _done():
@@ -100,4 +121,93 @@ def decode_attention(q: Array, k: Array, v: Array, pos: Array, *,
         ],
         interpret=interpret,
     )(pos.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, dh)
+
+
+def _paged_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *,
+                         scale: float, block: int, window: int, s_log: int):
+    """Same online-softmax body as ``_decode_kernel``; the physical-block
+    indirection already happened in the index maps, so ``ki`` here is the
+    LOGICAL block index and the masking rules are unchanged."""
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+    # a logical block is dead when every one of its positions is masked;
+    # skipping it saves the two MXU dots (the DMA was already issued, but
+    # unallocated entries alias the scratch block, which is cheap to fetch).
+    live = (ki * block <= pos) if window <= 0 \
+        else ((ki * block <= pos) | (pos >= s_log))
+
+    @pl.when(live)
+    def _accum():
+        _accum_block(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                     scale=scale, block=block, ki=ki, pos=pos,
+                     window=window, s_cache=s_log)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0, :, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
+                           pos: Array, block_tables: Array, *,
+                           window: int = 0,
+                           interpret: bool = False) -> Array:
+    """q: (B,H,dh); k_pool,v_pool: (P,block,KV,dh); pos: (B,) int32;
+    block_tables: (B,NB) int32 → (B,H,dh).
+
+    Grid = (batch, kv_heads, NB logical blocks). ``pos`` and the block
+    table are scalar-prefetch operands: the K/V index maps pick physical
+    block ``block_tables[b, ki]`` out of the pool, so the gather happens in
+    the DMA engine, not the kernel body. ``window > 0`` applies the ring
+    validity rule over the slot's logical span NB·block (= the ring size).
+    """
+    B, H, dh = q.shape
+    P, block, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    NB = block_tables.shape[1]
+    assert H % KV == 0
+    group = H // KV
+    scale = 1.0 / (dh ** 0.5)
+    qg = q.reshape(B, KV, group, dh)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               block=block, window=window, s_log=NB * block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                        # pos, block_tables
+        grid=(B, KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b, h, ki, pos_r, bt_r: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, block, 1, dh),
+                         lambda b, h, ki, pos_r, bt_r:
+                         (bt_r[b, ki], 0, h, 0)),                      # k
+            pl.BlockSpec((1, block, 1, dh),
+                         lambda b, h, ki, pos_r, bt_r:
+                         (bt_r[b, ki], 0, h, 0)),                      # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b, h, ki, pos_r, bt_r: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, dh), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), qg,
+      k_pool, v_pool)
     return out.reshape(B, H, dh)

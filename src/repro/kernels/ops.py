@@ -64,6 +64,14 @@ def decode_attention(q, k, v, pos, *, window: int = 0, block_k: int = 256):
                                     block_k=block_k, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_decode_attention(q, k_pool, v_pool, pos, block_tables, *,
+                           window: int = 0):
+    return _decode.paged_decode_attention(q, k_pool, v_pool, pos,
+                                          block_tables, window=window,
+                                          interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("temperature", "block_b"))
 def router_scores(x, centroids, temperature: float, *, block_b: int = 256):
     return _router.router_scores(x, centroids, temperature, block_b=block_b,

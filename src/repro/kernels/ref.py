@@ -58,6 +58,25 @@ def decode_attention_ref(q: Array, k: Array, v: Array, pos: Array, *,
     return jnp.einsum("bhk,bkhd->bhd", w, vf)
 
 
+def paged_decode_attention_ref(q: Array, k_pool: Array, v_pool: Array,
+                               pos: Array, block_tables: Array, *,
+                               window: int = 0) -> Array:
+    """q: (B,H,dh); k_pool,v_pool: (P,block,KV,dh); pos: (B,);
+    block_tables: (B,NB) → (B,H,dh).
+
+    Definitionally: gather each slot's logical KV span out of the block
+    pool, then run the contiguous decode oracle over it. The slot's logical
+    cache size is NB·block; ``window > 0`` applies the ring validity rule
+    over that span.
+    """
+    B = q.shape[0]
+    NB, block = block_tables.shape[1], k_pool.shape[1]
+    k = k_pool[block_tables].reshape(B, NB * block, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, NB * block, *v_pool.shape[2:])
+    return decode_attention_ref(q, k, v, pos,
+                                window=NB * block if window > 0 else 0)
+
+
 def router_scores_ref(x: Array, centroids: Array,
                       temperature: float) -> Array:
     """Fused Eq. 28: L2-normalize both → cosine sims → τ-softmax.

@@ -49,6 +49,14 @@ def main() -> None:
     ap.add_argument("--engine", choices=["slots", "batch"], default="slots")
     ap.add_argument("--slots", type=int, default=8,
                     help="cache slots per pod (slot engine)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: slots hold block tables into a "
+                         "shared pool instead of fixed-length cache rows")
+    ap.add_argument("--page-block", type=int, default=16,
+                    help="positions per KV block (with --paged)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="physical blocks in the pool per pod "
+                         "(0 → full capacity: slots × blocks-per-slot + 1)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -86,7 +94,9 @@ def main() -> None:
                  for i in range(args.requests)]
         server = DecentralizedSlotServer(
             model, experts, router, n_slots=args.slots, cache_len=cache_len,
-            strategy=args.strategy, use_kernel=args.use_kernel)
+            strategy=args.strategy, use_kernel=args.use_kernel,
+            page_block=args.page_block if args.paged else 0,
+            pool_blocks=args.pool_blocks)
         finished = server.serve(queue)
         out = np.stack([np.asarray(finished[i], dtype=np.int32)
                         for i in range(args.requests)])
@@ -121,6 +131,7 @@ def main() -> None:
         "engine": args.engine,
         "strategy": args.strategy,
         "slots": args.slots if args.engine == "slots" else None,
+        "paged": args.paged if args.engine == "slots" else None,
         "use_kernel": args.use_kernel,
         "wall_s": round(dt, 2),
         "tok_per_s": round(args.requests * args.new_tokens / dt, 1),

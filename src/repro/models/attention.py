@@ -169,6 +169,57 @@ def decode_attention(params, x: Array, cfg, cache: Tuple[Array, Array],
     return proj, (k_cache, v_cache)
 
 
+def paged_decode_attention(params, x: Array, cfg,
+                           pool: Tuple[Array, Array], pos: Array,
+                           block_tables: Array, *,
+                           use_kernel: bool = False, rope: bool = True):
+    """One-token decode against a PAGED KV cache. x: (B, 1, D); pool K/V:
+    (P, block, KV, dh) shared block pool; pos: (B,) current positions;
+    block_tables: (B, NB) logical-block → physical-block map per slot.
+    Returns (out (B, 1, D), new pool).
+
+    Logical capacity is NB·block per slot; with ``cfg.sliding_window > 0``
+    the slot's logical span is addressed as a ring of that size (the
+    scheduler sizes NB so it equals the contiguous ring length). Unallocated
+    table entries point at physical block 0 — the reserved scratch block —
+    and are masked out by the position rule, so a slot never reads another
+    slot's blocks.
+    """
+    B = x.shape[0]
+    k_pool, v_pool = pool
+    bs = k_pool.shape[1]
+    NB = block_tables.shape[1]
+    S_log = NB * bs
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    q, k_new, v_new = _qkv(params, x, cfg, pos_b[:, None], rope=rope)
+    # scatter the new token's K/V into each slot's current block — physical
+    # blocks are uniquely owned, so the batched scatter never collides
+    # (inactive slots all write block 0 offset 0, the scratch block).
+    r = pos_b % S_log if cfg.sliding_window > 0 else pos_b
+    blk = jnp.take_along_axis(block_tables, (r // bs)[:, None], axis=1)[:, 0]
+    off = r % bs
+    k_pool = k_pool.at[blk, off].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new[:, 0].astype(v_pool.dtype))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(q[:, 0], k_pool, v_pool, pos_b,
+                                          block_tables,
+                                          window=cfg.sliding_window)
+        out = out[:, None]
+    else:
+        kf = k_pool[block_tables].reshape(B, S_log, *k_pool.shape[2:])
+        vf = v_pool[block_tables].reshape(B, S_log, *v_pool.shape[2:])
+        idx = jnp.arange(S_log)[None, :]
+        if cfg.sliding_window > 0:
+            valid = (idx <= pos_b[:, None]) | (pos_b[:, None] >= S_log)
+        else:
+            valid = idx <= pos_b[:, None]
+        out = gqa_sdpa(q, kf, vf, valid[:, None, :],
+                       jnp.dtype(cfg.attn_softmax_dtype))
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return proj, (k_pool, v_pool)
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (enc-dec)
 # ---------------------------------------------------------------------------

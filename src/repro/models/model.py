@@ -76,6 +76,23 @@ def scan_layers(body, carry, xs, cfg: ModelConfig):
 
 
 @dataclass(frozen=True)
+class PagedLayout:
+    """Block-table indirection descriptor for the pageable cache leaves.
+
+    ``seq_axes`` mirrors the cache pytree: for leaves that live in the
+    shared block pool it gives the index of the *sequence* axis in the
+    contiguous layout (e.g. attention KV (L, B, S, KV, dh) → 2); leaves
+    that stay on the direct per-slot path (recurrent states, enc-dec
+    cross-attention KV) carry ``-1``. In the pool layout a paged leaf's
+    (B, S) pair is replaced by (n_blocks, block_size) and addressed through
+    a per-slot block table — so every slot pays only for the blocks it has
+    actually written instead of a full-length cache row.
+    """
+    block_size: int
+    seq_axes: Any
+
+
+@dataclass(frozen=True)
 class CacheSpec:
     """Layout descriptor for a model family's decode cache.
 
@@ -84,14 +101,24 @@ class CacheSpec:
     cache leaf — e.g. attention KV caches are (L, B, S, KV, dh) → 1, Mamba2
     states are (G, gm, B, ...) → 2. Slot servers use it to splice one
     request's prefill state into a batched cache without knowing the family.
+
+    ``paged`` (optional) describes the block-pool variant of the same cache:
+    which leaves are addressed through a block table and at what block size.
     """
     batch_axes: Any
+    paged: Optional[PagedLayout] = None
 
     def shifted(self, by: int = 1) -> "CacheSpec":
         """Spec for the same cache with ``by`` extra dims inserted before
         every batch axis (e.g. the stacked-expert K dim of the mixture
         decode core, which sits after each leaf's scan dim)."""
-        return CacheSpec(jax.tree.map(lambda a: a + by, self.batch_axes))
+        paged = self.paged
+        if paged is not None:
+            paged = PagedLayout(paged.block_size,
+                                jax.tree.map(lambda a: a + by if a >= 0
+                                             else a, paged.seq_axes))
+        return CacheSpec(jax.tree.map(lambda a: a + by, self.batch_axes),
+                         paged)
 
     def insert(self, cache, row_cache, slot: int):
         """Write a single-request cache (batch extent 1 on each leaf's batch
@@ -100,6 +127,38 @@ class CacheSpec:
             lambda full, row, ax: jax.lax.dynamic_update_slice_in_dim(
                 full, row.astype(full.dtype), slot, axis=ax),
             cache, row_cache, self.batch_axes)
+
+    def insert_paged(self, cache, row_cache, slot: int, blocks: Array):
+        """Splice a single-request contiguous prefill cache into the paged
+        cache: pool leaves scatter the first ``len(blocks) * block_size``
+        cache-row positions into the physical blocks listed in ``blocks``
+        (int32 (nb,)); direct leaves behave exactly like ``insert``."""
+        assert self.paged is not None, "insert_paged needs a paged spec"
+        bs = self.paged.block_size
+        nb = blocks.shape[0]
+
+        def one(full, row, b_ax, s_ax):
+            if s_ax < 0:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, row.astype(full.dtype), slot, axis=b_ax)
+            # pool leaf: contiguous row is (..., 1, S, ...) with the batch
+            # extent-1 at b_ax and the sequence at s_ax == b_ax + 1; the
+            # pool is (..., P, bs, ...) at the same axis positions.
+            assert s_ax == b_ax + 1, (b_ax, s_ax)
+            row = jnp.squeeze(row, axis=b_ax)          # seq now at b_ax
+            take = min(nb * bs, row.shape[b_ax])
+            row = jax.lax.slice_in_dim(row, 0, take, axis=b_ax)
+            if take < nb * bs:                         # cache_len ∤ block
+                pad = [(0, 0)] * row.ndim
+                pad[b_ax] = (0, nb * bs - take)
+                row = jnp.pad(row, pad)
+            row = row.reshape(row.shape[:b_ax] + (nb, bs)
+                              + row.shape[b_ax + 1:])
+            idx = (slice(None),) * b_ax + (blocks,)
+            return full.at[idx].set(row.astype(full.dtype))
+
+        seq = self.paged.seq_axes
+        return jax.tree.map(one, cache, row_cache, self.batch_axes, seq)
 
     def take(self, cache, slot: int):
         """Read one slot's cache back out (batch extent 1 preserved)."""
@@ -358,22 +417,63 @@ class Model:
     def cache_shapes(self, batch: int, cache_len: int):
         return self._cache_struct(batch, cache_len, as_shape=True)
 
-    def cache_spec(self) -> CacheSpec:
-        """Batch-axis descriptor matching ``_cache_struct``'s layouts."""
+    def cache_spec(self, block_size: int = 0) -> CacheSpec:
+        """Batch-axis descriptor matching ``_cache_struct``'s layouts.
+
+        With ``block_size > 0`` the spec also carries the paged layout:
+        attention KV leaves page through a block pool; recurrent states and
+        enc-dec cross-attention KV (written once, fixed extent) stay on the
+        direct per-slot path (seq axis ``-1``).
+        """
         cfg = self.cfg
         if cfg.family in ("dense", "vlm", "moe"):
             axes = {"k": 1, "v": 1}
+            seq = {"k": 2, "v": 2}
         elif cfg.family == "audio":
             axes = {"k": 1, "v": 1, "xk": 1, "xv": 1}
+            seq = {"k": 2, "v": 2, "xk": -1, "xv": -1}
         elif cfg.family == "ssm":
-            axes = {"mlstm": 2,
-                    "slstm": tuple(1 for _ in
-                                   ssm_lib.slstm_state_shapes(cfg, 1))}
+            n_slstm = len(ssm_lib.slstm_state_shapes(cfg, 1))
+            axes = {"mlstm": 2, "slstm": tuple(1 for _ in range(n_slstm))}
+            seq = {"mlstm": -1, "slstm": tuple(-1 for _ in range(n_slstm))}
         elif cfg.family == "hybrid":
             axes = {"ssm": 2, "conv": 2, "k": 1, "v": 1}
+            seq = {"ssm": -1, "conv": -1, "k": 2, "v": 2}
         else:
             raise ValueError(cfg.family)
-        return CacheSpec(axes)
+        paged = PagedLayout(block_size, seq) if block_size > 0 else None
+        return CacheSpec(axes, paged)
+
+    def _paged_cache_struct(self, n_slots: int, n_blocks: int,
+                            block_size: int, cache_len: int, as_shape: bool):
+        """Paged decode cache: pool leaves replace their (B, S) pair with
+        (n_blocks, block_size) — one shared pool addressed through per-slot
+        block tables; direct leaves keep their n_slots rows."""
+        base = self._cache_struct(n_slots, cache_len, as_shape=True)
+        spec = self.cache_spec(block_size)
+
+        def one(s, b_ax, s_ax):
+            if s_ax < 0:
+                return s
+            shape = s.shape[:b_ax] + (n_blocks, block_size) \
+                + s.shape[s_ax + 1:]
+            return jax.ShapeDtypeStruct(shape, s.dtype)
+
+        shapes = jax.tree.map(one, base, spec.batch_axes,
+                              spec.paged.seq_axes)
+        if as_shape:
+            return shapes
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def init_paged_cache(self, n_slots: int, n_blocks: int, block_size: int,
+                         cache_len: int):
+        return self._paged_cache_struct(n_slots, n_blocks, block_size,
+                                        cache_len, as_shape=False)
+
+    def paged_cache_shapes(self, n_slots: int, n_blocks: int,
+                           block_size: int, cache_len: int):
+        return self._paged_cache_struct(n_slots, n_blocks, block_size,
+                                        cache_len, as_shape=True)
 
     # ------------------------------------------------------------------
     # Prefill: full sequence forward + decode state construction
@@ -587,6 +687,89 @@ class Model:
                 a, kv = attn.decode_attention(
                     shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
                     cfg, (k, v), pos, use_kernel=use_kernel)
+                h = x + a
+                out = h + swiglu(shared["ffn"],
+                                 rms_norm(h, shared["ln2"], cfg.norm_eps))
+                return out, (ssm_st, conv_st) + kv
+            x, (ssm_s, conv_s, ks, vs) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["ssm"], cache["conv"],
+                           cache["k"], cache["v"])), cfg)
+            new_cache = {"ssm": ssm_s, "conv": conv_s, "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
+        return logits[:, 0], new_cache
+
+    def decode_step_paged(self, params, cache, tokens: Array, pos: Array,
+                          block_tables: Array, *, use_kernel: bool = False):
+        """One-token decode against the paged cache. tokens: (B,) int32;
+        pos: (B,) int32 per-slot positions; block_tables: (B, NB) int32
+        logical-block → physical-pool-block maps (one table per slot,
+        shared by every attention layer). Attention KV leaves gather /
+        scatter through the pool; recurrent and cross-attention leaves run
+        the direct path unchanged."""
+        cfg = self.cfg
+        if cfg.family == "ssm":       # no pageable leaves: direct path
+            return self.decode_step(params, cache, tokens, pos,
+                                    use_kernel=use_kernel)
+        x = embed(params["embed"], tokens[:, None], cfg.cdtype)  # (B,1,D)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(x, layer_and_cache):
+                layer, (k, v) = layer_and_cache
+                a, kv = attn.paged_decode_attention(
+                    layer["attn"], rms_norm(x, layer["ln1"], cfg.norm_eps),
+                    cfg, (k, v), pos, block_tables, use_kernel=use_kernel)
+                h = x + a
+                y = rms_norm(h, layer["ln2"], cfg.norm_eps)
+                out = h + (moe_lib.moe_ffn(layer["moe"], y, cfg)
+                           if cfg.family == "moe" else swiglu(layer["ffn"], y))
+                return out, kv
+            x, (ks, vs) = scan_layers(
+                body, x, (params["blocks"], (cache["k"], cache["v"])), cfg)
+            new_cache = {"k": ks, "v": vs}
+
+        elif cfg.family == "audio":
+            def body(x, layer_and_cache):
+                layer, (k, v, xk, xv) = layer_and_cache
+                a, kv = attn.paged_decode_attention(
+                    layer["self_attn"], rms_norm(x, layer["ln1"],
+                                                 cfg.norm_eps),
+                    cfg, (k, v), pos, block_tables, use_kernel=use_kernel)
+                h = x + a
+                h = h + attn.cross_attention(
+                    layer["cross_attn"], rms_norm(h, layer["ln2"],
+                                                  cfg.norm_eps),
+                    (xk, xv), cfg)
+                out = h + swiglu(layer["ffn"],
+                                 rms_norm(h, layer["ln3"], cfg.norm_eps))
+                return out, kv + (xk, xv)
+            x, (ks, vs, xks, xvs) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["k"], cache["v"], cache["xk"],
+                           cache["xv"])), cfg)
+            new_cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(x, group_and_cache):
+                group, (ssm_st, conv_st, k, v) = group_and_cache
+                def m_body(h, mc):
+                    m, st = mc
+                    y, st = ssm_lib.mamba2_step(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg,
+                        st)
+                    return h + y, st
+                x, (ssm_st, conv_st) = scan_layers(
+                    m_body, x, ({"ln": group["m_ln"], "core": group["mamba"]},
+                                (ssm_st, conv_st)), cfg)
+                a, kv = attn.paged_decode_attention(
+                    shared["attn"], rms_norm(x, shared["ln1"], cfg.norm_eps),
+                    cfg, (k, v), pos, block_tables, use_kernel=use_kernel)
                 h = x + a
                 out = h + swiglu(shared["ffn"],
                                  rms_norm(h, shared["ln2"], cfg.norm_eps))

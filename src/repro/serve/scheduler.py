@@ -1,5 +1,5 @@
 """Continuous batching: slot-based request schedulers over the decode core
-(vLLM-style, minus paging — slots are fixed-length cache rows).
+(vLLM-style, with optional paged KV caching).
 
 Requests arrive with different prompt lengths and budgets; a server admits
 each into a free slot (single-row prefill, inserted into the batched cache
@@ -12,6 +12,27 @@ each cache leaf's slot axis lives, so the same admission/step machinery
 drives attention KV rings (dense/moe/vlm), enc-dec cross-attention caches
 (audio), and recurrent states (ssm/hybrid).
 
+Two cache layouts share the machinery:
+
+* **contiguous** (``page_block=0``) — each slot owns a fixed-length cache
+  row of ``cache_len`` positions: simple, but every request pays for the
+  longest possible row and the server's memory is O(n_slots × cache_len).
+* **paged** (``page_block>0``) — attention KV leaves live in one shared
+  block pool; each slot holds a *block table* mapping its logical blocks
+  to physical pool blocks. Admission reserves only the blocks its prompt
+  needs (``BlockAllocator`` free list), decode steps grow the reservation
+  lazily, and retirement returns the blocks — so a request can decode past
+  its initial reservation (no silent truncation) and pool memory is sized
+  to expected load, not worst case. Recurrent/cross-attention leaves keep
+  their direct per-slot rows (they are O(1) per slot already). Physical
+  block 0 is reserved as a scratch target so inactive slots' lockstep
+  writes never touch a live request's blocks.
+
+A request that hits the serving context bound (``cache_len``) before its
+token budget retires with ``Request.truncated = True`` — distinguishable
+from normal completion. The bound is capacity-exact: position
+``cache_len - 1`` is decodable (the seed retired one token early).
+
 The decentralized deployment (paper §5.2) is ``DecentralizedSlotServer``:
 the parameter-free centroid router (Eq. 28) runs at the front end on each
 request's frozen-encoder features and either
@@ -23,10 +44,12 @@ request's frozen-encoder features and either
   layout (K after each scanned stack's layer dim — transpose-free for the
   scan), one jitted decode step vmaps over it and fuses the Eq. 27
   probability mixture, so the top-k path is a single sharded op instead of
-  K sequential engine calls.
+  K sequential engine calls. In the paged layout all K experts share one
+  block table per slot (the pool carries the ``dexpert`` dim).
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -39,6 +62,8 @@ from repro.models.model import Model
 
 Array = jnp.ndarray
 
+logger = logging.getLogger(__name__)
+
 
 @dataclass
 class Request:
@@ -50,6 +75,7 @@ class Request:
     #                             # unbatched modality inputs: "patches"
     #                             # (vlm), "frames" (audio)
     out: List[int] = field(default_factory=list)
+    truncated: bool = False       # retired at the context bound, not done
 
     @property
     def done(self) -> bool:
@@ -64,15 +90,81 @@ class Request:
         return b
 
 
+def _raise_dropped(dropped: List[int], n_finished: int,
+                   max_steps: int) -> None:
+    """Exhausting the drive loop with unfinished requests is never a silent
+    drop: log the count, then raise."""
+    logger.error(
+        "serve() exhausted max_steps=%d: dropping %d unfinished "
+        "request(s) %s (%d finished)", max_steps, len(dropped), dropped,
+        n_finished)
+    raise RuntimeError(
+        f"serve() exhausted max_steps={max_steps} with {len(dropped)} "
+        f"request(s) {dropped} unfinished — raise max_steps or shrink "
+        f"budgets")
+
+
+class BlockAllocator:
+    """Free-list allocator over a shared pool of KV cache blocks.
+
+    Physical block 0 is reserved as the scratch block: inactive slots'
+    lockstep decode writes land there (their block tables are zeroed), so
+    the pool hands out blocks 1..n_blocks-1. ``alloc`` is all-or-nothing —
+    a partially satisfiable request leaves the free list untouched.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError(f"pool needs >= 2 blocks (one is the reserved "
+                             f"scratch block), got {n_blocks}")
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, 0, -1))   # pop() → low ids
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert 0 < b < self.n_blocks, b
+        self._free.extend(blocks)
+
+
 class _SlotTable:
     """Slot bookkeeping + the continuous-admission drive loop shared by the
-    single-engine and stacked-mixture servers."""
+    single-engine and stacked-mixture servers. With ``block_size > 0`` it
+    also owns the paged-cache block tables and allocator."""
 
-    def __init__(self, n_slots: int, cache_len: int):
+    def __init__(self, n_slots: int, cache_len: int, *, block_size: int = 0,
+                 n_blocks: int = 0, window: int = 0):
         self.n_slots, self.cache_len = n_slots, cache_len
         self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.last_tok = np.zeros(n_slots, dtype=np.int32)
+        self.admit_retired: List[Request] = []  # retired without a slot
+        self.block_size = block_size
+        self.paged = block_size > 0
+        if self.paged:
+            s_kv = min(cache_len, window) if window > 0 else cache_len
+            self.ring = window > 0
+            if self.ring:
+                if s_kv % block_size:
+                    raise ValueError(
+                        f"sliding-window ring length {s_kv} must be a "
+                        f"multiple of page_block={block_size}")
+                self.nb_slot = s_kv // block_size
+            else:
+                self.nb_slot = -(-cache_len // block_size)
+            if n_blocks <= 0:       # default: full capacity + scratch
+                n_blocks = n_slots * self.nb_slot + 1
+            self.allocator = BlockAllocator(n_blocks)
+            self.block_tables = np.zeros((n_slots, self.nb_slot), np.int32)
+            self.n_alloc = np.zeros(n_slots, dtype=np.int32)
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -87,6 +179,105 @@ class _SlotTable:
     def step(self) -> List[Request]:
         raise NotImplementedError
 
+    def _prefill_width(self, req: Request) -> int:
+        """Decoder positions a request's prefill consumes (so admission can
+        reserve blocks before paying for the prefill). Subclasses set
+        ``self.model`` before admitting."""
+        w = len(req.tokens)
+        if self.model.cfg.family == "vlm":
+            w += self.model.cfg.n_patches          # image prefix
+        return w
+
+    def _admission_precheck(self, req: Request, slot: int,
+                            width: int) -> bool:
+        """Runs BEFORE the prefill is paid for. False → can't admit right
+        now (pool has no blocks free: the request stays pending). A prompt
+        that exceeds the serving context is malformed and rejected loudly —
+        the cache row cannot even hold its prefill."""
+        if width > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt needs {width} positions but the "
+                f"serving context is cache_len={self.cache_len} — reject "
+                f"the request or raise cache_len")
+        if self.paged and width < self.cache_len and \
+                not self._reserve(slot, width):
+            return False
+        return True
+
+    def _admit_prefilled(self, slot: int, req: Request, first: int,
+                         width: int, row_cache) -> None:
+        """Insert an admitted request's prefill state (paged or contiguous)
+        and occupy its slot."""
+        if self.paged:
+            blocks = jnp.asarray(
+                self.block_tables[slot, :int(self.n_alloc[slot])])
+            self.cache = self.spec.insert_paged(self.cache, row_cache, slot,
+                                                blocks)
+        else:
+            self.cache = self.spec.insert(self.cache, row_cache, slot)
+        self._occupy(slot, req, first, width)
+
+    # ------------------------------------------------------------------
+    # Paged-cache bookkeeping
+    # ------------------------------------------------------------------
+
+    def _reserve(self, slot: int, upto: int) -> bool:
+        """Grow ``slot``'s block reservation to cover logical positions
+        [0, upto). Ring (sliding-window) slots reserve their whole bounded
+        span at once. All-or-nothing; False when the pool can't satisfy."""
+        need = self.nb_slot if self.ring else \
+            min(-(-upto // self.block_size), self.nb_slot)
+        need = max(need, 1)
+        have = int(self.n_alloc[slot])
+        if need <= have:
+            return True
+        blocks = self.allocator.alloc(need - have)
+        if blocks is None:
+            return False
+        self.block_tables[slot, have:need] = blocks
+        self.n_alloc[slot] = need
+        return True
+
+    def _grow_active(self) -> None:
+        """Before a lockstep decode step: make sure every active slot owns
+        the block its next write position lands in."""
+        if not self.paged or self.ring:
+            return
+        for slot in self.active:
+            if not self._reserve(slot, int(self.pos[slot]) + 1):
+                req = self.slot_req[slot]
+                raise RuntimeError(
+                    f"KV block pool exhausted growing slot {slot} (request "
+                    f"{req.rid}): {self.allocator.n_free} free of "
+                    f"{self.allocator.n_blocks} blocks — provision more "
+                    f"pool_blocks or fewer slots")
+
+    def _release(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        self.pos[slot] = 0           # free slots write the scratch block
+        self.last_tok[slot] = 0
+        if self.paged:
+            n = int(self.n_alloc[slot])
+            if n:
+                self.allocator.free(self.block_tables[slot, :n].tolist())
+            self.block_tables[slot, :] = 0
+            self.n_alloc[slot] = 0
+
+    def _retire_at_admission(self, req: Request, first_tok: int) -> None:
+        """The prompt already fills the context bound: the request keeps its
+        single prefill token and retires without ever holding a slot."""
+        req.out.append(first_tok)
+        req.truncated = not req.done
+        self.admit_retired.append(req)
+
+    def _drain_admit_retired(self) -> List[Request]:
+        out, self.admit_retired = self.admit_retired, []
+        return out
+
+    # ------------------------------------------------------------------
+    # Lockstep advance / drive loop
+    # ------------------------------------------------------------------
+
     def _occupy(self, slot: int, req: Request, first_tok: int,
                 prompt_len: int) -> None:
         req.out.append(first_tok)
@@ -96,78 +287,130 @@ class _SlotTable:
 
     def _advance(self, next_tok: np.ndarray) -> List[Request]:
         """Record one decoded token per active slot; retire finished
-        requests. next_tok: (n_slots,) int32 (inactive rows ignored)."""
+        requests (capacity-exact: position cache_len - 1 is decodable).
+        A capacity retirement marks the request ``truncated``.
+        next_tok: (n_slots,) int32 (inactive rows ignored)."""
         retired = []
         for slot in self.active:
             req = self.slot_req[slot]
             req.out.append(int(next_tok[slot]))
             self.pos[slot] += 1
             self.last_tok[slot] = next_tok[slot]
-            if req.done or self.pos[slot] >= self.cache_len - 1:
+            if req.done or self.pos[slot] >= self.cache_len:
+                req.truncated = not req.done
                 retired.append(req)
-                self.slot_req[slot] = None
+                self._release(slot)
         return retired
 
     def serve(self, queue: List[Request], *, max_steps: int = 10_000
               ) -> Dict[int, List[int]]:
-        """Drive the queue to completion with continuous admission."""
+        """Drive the queue to completion with continuous admission.
+
+        Admission can fail transiently on a paged server (not enough free
+        KV blocks yet) — the request stays pending until retirements free
+        blocks. Exhausting ``max_steps`` with unfinished requests raises
+        (never a silent drop); the drop count is logged first.
+        """
         pending = list(queue)
         finished: Dict[int, List[int]] = {}
         for _ in range(max_steps):
             while pending and self.free_slots():
-                self.admit(pending.pop(0))
-            if not self.active and not pending:
-                break
+                if not self.admit(pending[0]):
+                    break            # wait for blocks to free up
+                pending.pop(0)
+            for req in self._drain_admit_retired():
+                finished[req.rid] = req.out
+            if not self.active:
+                if not pending:
+                    break
+                raise RuntimeError(
+                    f"cannot admit request {pending[0].rid} even on an idle "
+                    f"server — the KV block pool is too small for it")
             for req in self.step():
                 finished[req.rid] = req.out
-        leftover = [r.rid for r in pending] + \
+        dropped = [r.rid for r in pending] + \
             [r.rid for r in self.slot_req if r is not None]
-        if leftover:
-            raise RuntimeError(
-                f"serve() exhausted max_steps={max_steps} with requests "
-                f"{leftover} unfinished — raise max_steps or shrink budgets")
+        if dropped:
+            _raise_dropped(dropped, len(finished), max_steps)
         return finished
 
 
-def make_serve_fns(model: Model, cache_len: int, *,
-                   use_kernel: bool = False):
+def effective_page_block(model: Model, page_block: int) -> int:
+    """0 when the model has no pageable cache leaves (ssm: recurrent state
+    only) — paging such a family would run pool accounting that backs no
+    memory, so it degrades to the direct path instead."""
+    if page_block <= 0:
+        return 0
+    seq_axes = model.cache_spec(page_block).paged.seq_axes
+    return page_block if any(a >= 0 for a in jax.tree.leaves(seq_axes)) \
+        else 0
+
+
+def make_serve_fns(model: Model, cache_len: int, *, use_kernel: bool = False,
+                   paged: bool = False):
     """The jitted (prefill, decode) pair one SlotServer runs on. Params are
     an explicit argument, so pods serving different experts of the same
-    model SHARE one pair (one trace/compile instead of K)."""
+    model SHARE one pair (one trace/compile instead of K). With ``paged``
+    the decode fn takes the per-slot block tables as its last argument."""
     prefill = jax.jit(
         lambda p, b: model.prefill(p, b, cache_len, use_kernel=use_kernel))
-    decode = jax.jit(
-        lambda p, c, t, pos: model.decode_step(p, c, t, pos,
-                                               use_kernel=use_kernel))
+    if paged:
+        decode = jax.jit(
+            lambda p, c, t, pos, bt: model.decode_step_paged(
+                p, c, t, pos, bt, use_kernel=use_kernel))
+    else:
+        decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos,
+                                                   use_kernel=use_kernel))
     return prefill, decode
 
 
 class SlotServer(_SlotTable):
-    """Continuous batching over ONE expert / model (greedy decoding)."""
+    """Continuous batching over ONE expert / model (greedy decoding).
+
+    ``page_block > 0`` switches the attention KV leaves to the paged cache:
+    ``pool_blocks`` physical blocks of ``page_block`` positions shared by
+    all slots (0 → sized for full capacity, i.e. no admission blocking).
+    """
 
     def __init__(self, model: Model, params, n_slots: int, cache_len: int,
-                 *, use_kernel: bool = False, serve_fns=None):
-        super().__init__(n_slots, cache_len)
+                 *, use_kernel: bool = False, serve_fns=None,
+                 page_block: int = 0, pool_blocks: int = 0):
+        page_block = effective_page_block(model, page_block)
+        super().__init__(n_slots, cache_len, block_size=page_block,
+                         n_blocks=pool_blocks,
+                         window=model.cfg.sliding_window)
         self.model, self.params = model, params
         self.use_kernel = use_kernel
-        self.cache = model.init_cache(n_slots, cache_len)
-        self.spec = model.cache_spec()
+        if self.paged:
+            self.cache = model.init_paged_cache(
+                n_slots, self.allocator.n_blocks, page_block, cache_len)
+            self.spec = model.cache_spec(page_block)
+        else:
+            self.cache = model.init_cache(n_slots, cache_len)
+            self.spec = model.cache_spec()
         self._prefill, self._decode = serve_fns or make_serve_fns(
-            model, cache_len, use_kernel=use_kernel)
+            model, cache_len, use_kernel=use_kernel, paged=self.paged)
 
     def admit(self, req: Request) -> bool:
         """Prefill the request alone and insert its decode state at a free
-        slot."""
+        slot. False when no slot — or, paged, not enough free blocks."""
         free = self.free_slots()
         if not free:
             return False
         slot = free[0]
+        width = self._prefill_width(req)
+        if not self._admission_precheck(req, slot, width):
+            return False
         logits, row_cache = self._prefill(self.params, req.batch())
         # greedy first token from the prompt's last position
         first = int(jnp.argmax(logits[0, -1]))
-        self.cache = self.spec.insert(self.cache, row_cache, slot)
         # logits width = positions consumed (incl. any image prefix)
-        self._occupy(slot, req, first, logits.shape[1])
+        assert logits.shape[1] == width, (logits.shape, width)
+        if width == self.cache_len:
+            self._retire_at_admission(req, first)
+            return True
+        self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 
     def step(self) -> List[Request]:
@@ -175,9 +418,15 @@ class SlotServer(_SlotTable):
         retired this step."""
         if not self.active:
             return []
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_tok),
-            jnp.asarray(self.pos))
+        if self.paged:
+            self._grow_active()
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos), jnp.asarray(self.block_tables))
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
         return self._advance(nxt)
 
@@ -185,24 +434,33 @@ class SlotServer(_SlotTable):
 class MixtureSlotServer(_SlotTable):
     """Continuous batching over the STACKED expert ensemble: one cache
     carrying the expert (K) dim, one jitted vmapped decode step with the
-    Eq. 27 mixture fused in, per-slot router weights fixed at admission."""
+    Eq. 27 mixture fused in, per-slot router weights fixed at admission.
+    In the paged layout the block pool carries the K dim too, and all K
+    experts of a slot share ONE block table."""
 
     def __init__(self, model: Model, expert_params: List[Any], router,
-                 n_slots: int, cache_len: int, *, use_kernel: bool = False):
-        super().__init__(n_slots, cache_len)
+                 n_slots: int, cache_len: int, *, use_kernel: bool = False,
+                 page_block: int = 0, pool_blocks: int = 0):
+        page_block = effective_page_block(model, page_block)
+        super().__init__(n_slots, cache_len, block_size=page_block,
+                         n_blocks=pool_blocks,
+                         window=model.cfg.sliding_window)
         self.model, self.router = model, router
         self.K = len(expert_params)
         self.use_kernel = use_kernel
         self.stacked, _, self._prefill_all, self._mix_decode = \
             make_stacked_serving(model, expert_params, cache_len,
-                                 use_kernel=use_kernel)
+                                 use_kernel=use_kernel, paged=self.paged)
         # expert (K) dim at axis 1, AFTER each leaf's scan dim — the layout
         # the vmapped scanned decode consumes without per-step transposes
+        shapes = model.paged_cache_shapes(
+            n_slots, self.allocator.n_blocks, page_block, cache_len) \
+            if self.paged else model.cache_shapes(n_slots, cache_len)
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape[:1] + (self.K,) + s.shape[1:],
-                                s.dtype),
-            model.cache_shapes(n_slots, cache_len))
-        self.spec = model.cache_spec().shifted(1)   # batch axes move by 1
+                                s.dtype), shapes)
+        # batch/seq axes move by 1 under the K dim
+        self.spec = model.cache_spec(page_block).shifted(1)
         self.weights = np.zeros((n_slots, self.K), dtype=np.float32)
         self._mix = jax.jit(mix_expert_logits)
 
@@ -213,21 +471,34 @@ class MixtureSlotServer(_SlotTable):
         if req.features is None:
             raise ValueError("mixture admission routes on request features")
         slot = free[0]
+        width = self._prefill_width(req)
+        if not self._admission_precheck(req, slot, width):
+            return False
         w = self.router.route(jnp.asarray(req.features[None]))    # (1, K)
         logits, row_cache = self._prefill_all(self.stacked, req.batch())
         probs = self._mix(logits[:, :, -1], w)                    # (1, V)
         first = int(jnp.argmax(probs[0]))
-        self.cache = self.spec.insert(self.cache, row_cache, slot)
+        assert logits.shape[2] == width, (logits.shape, width)
+        if width == self.cache_len:
+            self._retire_at_admission(req, first)
+            return True
         self.weights[slot] = np.asarray(w[0])
-        self._occupy(slot, req, first, logits.shape[2])
+        self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 
     def step(self) -> List[Request]:
         if not self.active:
             return []
-        probs, self.cache = self._mix_decode(
-            self.stacked, self.cache, jnp.asarray(self.last_tok),
-            jnp.asarray(self.pos), jnp.asarray(self.weights))
+        if self.paged:
+            self._grow_active()
+            probs, self.cache = self._mix_decode(
+                self.stacked, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos), jnp.asarray(self.weights),
+                jnp.asarray(self.block_tables))
+        else:
+            probs, self.cache = self._mix_decode(
+                self.stacked, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos), jnp.asarray(self.weights))
         nxt = np.asarray(jnp.argmax(probs, axis=-1), dtype=np.int32)
         return self._advance(nxt)
 
@@ -239,24 +510,34 @@ class DecentralizedSlotServer:
                          per expert pod; each request decodes on exactly the
                          expert the router assigns it.
     strategy="mixture" — general top-k: the stacked-expert mixture core.
+
+    ``page_block > 0`` switches every pod (or the mixture core) to the
+    paged KV cache; ``pool_blocks`` is per pod.
     """
 
     def __init__(self, model: Model, expert_params: List[Any], router,
                  n_slots: int, cache_len: int, *, strategy: str = "top1",
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, page_block: int = 0,
+                 pool_blocks: int = 0):
         assert strategy in ("top1", "mixture"), strategy
         self.model, self.router = model, router
         self.K = len(expert_params)
         self.strategy = strategy
+        page_block = effective_page_block(model, page_block)
         if strategy == "top1":
-            fns = make_serve_fns(model, cache_len, use_kernel=use_kernel)
+            fns = make_serve_fns(model, cache_len, use_kernel=use_kernel,
+                                 paged=page_block > 0)
             self.pods = [SlotServer(model, p, n_slots, cache_len,
-                                    use_kernel=use_kernel, serve_fns=fns)
+                                    use_kernel=use_kernel, serve_fns=fns,
+                                    page_block=page_block,
+                                    pool_blocks=pool_blocks)
                          for p in expert_params]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,
                                           n_slots, cache_len,
-                                          use_kernel=use_kernel)
+                                          use_kernel=use_kernel,
+                                          page_block=page_block,
+                                          pool_blocks=pool_blocks)
 
     def route(self, queue: List[Request]) -> np.ndarray:
         feats = np.stack([r.features for r in queue])
@@ -277,20 +558,26 @@ class DecentralizedSlotServer:
             idle = True
             for k, pod in enumerate(self.pods):
                 while pending[k] and pod.free_slots():
-                    pod.admit(pending[k].pop(0))
+                    if not pod.admit(pending[k][0]):
+                        break        # pod's block pool is full right now
+                    pending[k].pop(0)
+                for req in pod._drain_admit_retired():
+                    finished[req.rid] = req.out
+                if pending[k] and not pod.active:
+                    raise RuntimeError(
+                        f"cannot admit request {pending[k][0].rid} even on "
+                        f"idle pod {k} — its KV block pool is too small")
                 if pod.active or pending[k]:
                     idle = False
                 for req in pod.step():
                     finished[req.rid] = req.out
             if idle:
                 break
-        leftover = [r.rid for reqs in pending for r in reqs] + \
+        dropped = [r.rid for reqs in pending for r in reqs] + \
             [r.rid for pod in self.pods for r in pod.slot_req
              if r is not None]
-        if leftover:
-            raise RuntimeError(
-                f"serve() exhausted max_steps={max_steps} with requests "
-                f"{leftover} unfinished — raise max_steps or shrink budgets")
+        if dropped:
+            _raise_dropped(dropped, len(finished), max_steps)
         return finished
 
     def occupancy(self) -> List[int]:

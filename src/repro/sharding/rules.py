@@ -87,7 +87,8 @@ def data_shardings(rules, mesh: Mesh, cfg, kind: str,
     return shardings
 
 
-def stacked_cache_pspec_tree(stacked_cache_shapes, rules, mesh: Mesh):
+def stacked_cache_pspec_tree(stacked_cache_shapes, rules, mesh: Mesh,
+                             seq_axes=None):
     """Shardings for the stacked-expert decode core's cache: every leaf
     carries the K (``dexpert``) dim at axis 1 — after its scan dim, the
     transpose-free layout of ``core/ensemble.stack_experts_for_decode`` —
@@ -95,26 +96,79 @@ def stacked_cache_pspec_tree(stacked_cache_shapes, rules, mesh: Mesh):
     remainder placed exactly as ``cache_pspec_tree`` places the unstacked
     cache. This makes the vmapped mixture ``decode_step`` one SPMD op whose
     expert slices stay on their own pods (the serving analogue of
-    zero-communication training)."""
+    zero-communication training).
+
+    Pass ``seq_axes`` — the UNSTACKED ``CacheSpec.paged.seq_axes`` pytree —
+    when the stacked cache is the paged layout, so pool leaves get their
+    block-pool placement."""
     import jax
 
     def strip(s):
         return jax.ShapeDtypeStruct(s.shape[:1] + s.shape[2:], s.dtype)
 
-    inner = cache_pspec_tree(jax.tree.map(strip, stacked_cache_shapes),
-                             rules, mesh)
+    stripped = jax.tree.map(strip, stacked_cache_shapes)
+    if seq_axes is None:
+        inner = cache_pspec_tree(stripped, rules, mesh)
+    else:
+        inner = paged_pool_pspec_tree(stripped, rules, mesh, seq_axes)
     return jax.tree.map(
         lambda ns: NamedSharding(
             mesh, P(ns.spec[0] if len(ns.spec) else None,
                     rules["dexpert"], *ns.spec[1:])), inner)
 
 
+def _cache_leaf_spec(shape_struct, rules, mesh: Mesh) -> P:
+    """Contiguous cache-leaf placement: batch over data, heads over model
+    when divisible. Cache layouts all carry the layer/group dim first and
+    batch second (attention) or inside (states) — we shard batch and leave
+    exotic dims replicated when indivisible."""
+    shape = shape_struct.shape
+    ndim = len(shape)
+    b_axes = rules["kv_cache_batch"]
+    extent = 1
+    for a in (b_axes if isinstance(b_axes, tuple) else (b_axes,)):
+        extent *= mesh.shape[a]
+    spec = [None] * ndim
+    # find the batch dim: layouts here are (L, B, ...) or (G, gm, B, ...)
+    for cand in (1, 2):
+        if ndim > cand and shape[cand] % extent == 0 and shape[cand] > 1:
+            spec[cand] = b_axes
+            break
+    # (L,B,S,KV,dh) attention-cache layouts: shard kv-heads over model
+    # when divisible, else shard the *sequence* dim (distributed-decode
+    # partial-softmax layout — XLA inserts the reduction collectives).
+    if ndim == 5 and spec[1] == b_axes:
+        kv, seq = shape[-2], shape[2]
+        if kv % mesh.shape["model"] == 0 and kv > 1:
+            spec[-2] = "model"
+        elif seq % mesh.shape["model"] == 0 and seq > 1:
+            spec[2] = "model"
+    return P(*spec)
+
+
 def cache_pspec_tree(cache_shapes, rules, mesh: Mesh):
-    """KV-cache / recurrent-state shardings: batch over data, heads over
-    model when divisible. Cache layouts all carry the layer/group dim first
-    and batch second (attention) or inside (states) — we shard batch and
-    leave exotic dims replicated when indivisible."""
-    def one(shape_struct):
+    """KV-cache / recurrent-state shardings for the contiguous layout."""
+    import jax
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _cache_leaf_spec(s, rules, mesh)),
+        cache_shapes)
+
+
+def paged_pool_pspec_tree(paged_cache_shapes, rules, mesh: Mesh, seq_axes):
+    """Shardings for the PAGED decode cache. ``seq_axes`` is the
+    ``CacheSpec.paged.seq_axes`` pytree: leaves marked ``-1`` are direct
+    per-slot rows and keep their contiguous placement; pool leaves
+    (scan, P, block, KV, dh) shard the *physical block* axis over the
+    kv-cache batch axes — blocks, not slots, are the unit of placement, so
+    the pool scales with device count while the per-slot block table stays
+    replicated host state — and kv-heads over ``model`` when divisible
+    (block positions are never sharded: a block is the DMA granule)."""
+    import jax
+
+    def one(shape_struct, s_ax):
+        if s_ax < 0:
+            return NamedSharding(mesh,
+                                 _cache_leaf_spec(shape_struct, rules, mesh))
         shape = shape_struct.shape
         ndim = len(shape)
         b_axes = rules["kv_cache_batch"]
@@ -122,20 +176,13 @@ def cache_pspec_tree(cache_shapes, rules, mesh: Mesh):
         for a in (b_axes if isinstance(b_axes, tuple) else (b_axes,)):
             extent *= mesh.shape[a]
         spec = [None] * ndim
-        # find the batch dim: layouts here are (L, B, ...) or (G, gm, B, ...)
-        for cand in (1, 2):
-            if ndim > cand and shape[cand] % extent == 0 and shape[cand] > 1:
-                spec[cand] = b_axes
-                break
-        # (L,B,S,KV,dh) attention-cache layouts: shard kv-heads over model
-        # when divisible, else shard the *sequence* dim (distributed-decode
-        # partial-softmax layout — XLA inserts the reduction collectives).
-        if ndim == 5 and spec[1] == b_axes:
-            kv, seq = shape[-2], shape[2]
+        pool_ax = s_ax - 1          # the axis the slot (batch) axis held
+        if shape[pool_ax] % extent == 0 and shape[pool_ax] > 1:
+            spec[pool_ax] = b_axes
+        if ndim == 5:
+            kv = shape[-2]
             if kv % mesh.shape["model"] == 0 and kv > 1:
                 spec[-2] = "model"
-            elif seq % mesh.shape["model"] == 0 and seq > 1:
-                spec[2] = "model"
         return NamedSharding(mesh, P(*spec))
-    import jax
-    return jax.tree.map(one, cache_shapes)
+
+    return jax.tree.map(one, paged_cache_shapes, seq_axes)

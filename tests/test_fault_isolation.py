@@ -69,3 +69,36 @@ def test_expert_failure_is_isolated(tmp_path):
     # its checkpoint dir is untouched by expert 1's failure/restore cycle
     assert ckpt.latest_step(base, 0) == 5
     assert np.isfinite(final_losses[0])
+
+
+def test_ckpt_roundtrip_preserves_empty_containers(tmp_path):
+    """load(save(tree)) must return the SAME pytree structure, including
+    empty dicts/lists/tuples (e.g. optimizer extra-state slots) — the seed
+    flattener dropped them, silently changing the tree structure."""
+    tree = {
+        "params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                   "empty": {}},
+        "mu": [np.ones(3, np.float32), []],
+        "extras": (),
+        "nested": {"a": ({"b": []},), "t": (np.int32(3), {})},
+        "step": np.int64(7),
+    }
+    path = str(tmp_path / "rt.npz")
+    ckpt.save(path, tree)
+    got = jax.device_get(ckpt.load(path))
+
+    assert jax.tree.structure(got) == jax.tree.structure(tree), (
+        jax.tree.structure(got), jax.tree.structure(tree))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), got, tree)
+    # the exact container types survive too (tuple vs list matters to jit)
+    assert isinstance(got["params"]["empty"], dict)
+    assert got["mu"][1] == [] and isinstance(got["mu"][1], list)
+    assert got["extras"] == () and isinstance(got["extras"], tuple)
+    assert isinstance(got["nested"]["a"][0]["b"], list)
+    # every empty container is a FRESH object — mutating one restored tree
+    # must never leak into other containers or later loads
+    assert got["params"]["empty"] is not got["nested"]["t"][1]
+    got["params"]["empty"]["x"] = 1
+    again = ckpt.load(path)
+    assert again["params"]["empty"] == {}

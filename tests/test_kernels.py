@@ -92,6 +92,50 @@ def test_decode_attention_ring_buffer():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("pos_val", [126, 127, 128, 129, 255, 256])
+def test_decode_attention_ring_wrap_boundary(pos_val):
+    """The ``pos >= s_cache`` validity flip in ``_decode_kernel`` at the
+    exact wrap boundary: pos = S-1 is the last masked step (slots > pos
+    still invalid), pos = S is the first fully-valid step, and every later
+    position stays fully valid. Checked against the jnp oracle so a fence
+    error on either side of the flip fails loudly."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    B, S, H, KV, dh = 2, 128, 4, 2, 64
+    q = rand(ks[0], (B, H, dh), jnp.float32)
+    k = rand(ks[1], (B, S, KV, dh), jnp.float32)
+    v = rand(ks[2], (B, S, KV, dh), jnp.float32)
+    pos = jnp.asarray([pos_val, max(pos_val - 1, 0)])
+    out = decode_attention(q, k, v, pos, window=S, block_k=64,
+                           interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos, window=S)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    if pos_val >= S:
+        # post-wrap the ring is position-independent: every slot attends
+        full = ref.decode_attention_ref(q, k, v,
+                                        jnp.full((B,), 10 * S), window=S)
+        np.testing.assert_allclose(np.asarray(out)[:1],
+                                   np.asarray(full)[:1],
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("pos_val", [0, 63, 64, 127])
+def test_decode_attention_full_cache_boundary(pos_val):
+    """window == 0 (full cache): validity is strictly ``idx <= pos`` — in
+    particular the final position S-1 attends over the whole cache and
+    block boundaries (block_k=64) introduce no fence error."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, S, H, KV, dh = 2, 128, 4, 2, 64
+    q = rand(ks[0], (B, H, dh), jnp.float32)
+    k = rand(ks[1], (B, S, KV, dh), jnp.float32)
+    v = rand(ks[2], (B, S, KV, dh), jnp.float32)
+    pos = jnp.asarray([pos_val, S - 1 - pos_val])
+    out = decode_attention(q, k, v, pos, block_k=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # router scores
 # ---------------------------------------------------------------------------
