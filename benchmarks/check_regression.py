@@ -1,0 +1,109 @@
+"""CI perf-regression gate over ``BENCH_serve.json``.
+
+Compares the benchmark emission against a committed baseline
+(``benchmarks/baseline_serve.json``) and fails on regression. Three metric
+classes:
+
+* **gated ratios** — scale-free speedups and memory ratios. These are
+  stable across machines (both sides of each ratio run back-to-back on the
+  same box), so they get a tolerance band around the baseline AND a hard
+  floor where the serving claim itself sets one (chunked decode throughput
+  under burst ≥ 1.3× monolithic).
+* **invariants** — parity flags. Exact; any drift fails.
+* **informational** — absolute tok/s and TTFT seconds. Machine-dependent;
+  recorded in the report (and the uploaded artifact) but never gated, so a
+  slow CI runner can't flake the job.
+
+Re-baselining: run ``python -m benchmarks.serve_bench`` on a quiet
+machine, inspect the printed report, then
+``cp BENCH_serve.json benchmarks/baseline_serve.json`` and commit it with
+a justification in the message (see docs/serving.md).
+
+Usage: ``python -m benchmarks.check_regression [result.json] [baseline.json]``
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# (section, key) -> spec. "floor" is an absolute hard bound; "rel_tol" is
+# the allowed relative drop (for higher-is-better) / rise (for lower) vs
+# the committed baseline. Both must hold.
+GATED = {
+    ("serve_mixture", "stacked_over_looped"): {
+        "higher_is_better": True, "rel_tol": 0.35, "floor": 0.85},
+    ("serve_paged", "paged_over_contiguous"): {
+        "higher_is_better": True, "rel_tol": 0.35, "floor": 0.60},
+    ("serve_paged", "kv_memory_ratio"): {
+        "higher_is_better": False, "rel_tol": 0.0},   # layout fact: exact
+    ("serve_chunked", "chunked_over_monolithic"): {
+        "higher_is_better": True, "rel_tol": 0.35, "floor": 1.30},
+}
+
+INVARIANTS = [
+    ("serve_paged", "parity"),
+    ("serve_chunked", "parity"),
+]
+
+INFORMATIONAL = [
+    ("serve_mixture", "stacked_steps_per_s"),
+    ("serve_paged", "paged_tok_per_s"),
+    ("serve_chunked", "chunked_decode_tok_per_s"),
+    ("serve_chunked", "monolithic_burst_ttft_s"),
+    ("serve_chunked", "chunked_burst_ttft_s"),
+]
+
+
+def check(result: dict, baseline: dict) -> int:
+    failures = []
+    print(f"{'metric':52s} {'value':>10s} {'baseline':>10s}  verdict")
+    for (sec, key), spec in GATED.items():
+        got = result[sec][key]
+        base = baseline[sec][key]
+        tol = spec["rel_tol"]
+        if spec["higher_is_better"]:
+            bound = base * (1.0 - tol)
+            ok = got >= bound
+            if "floor" in spec:
+                ok = ok and got >= spec["floor"]
+                bound = max(bound, spec["floor"])
+        else:
+            bound = base * (1.0 + tol)
+            ok = got <= bound
+        verdict = "ok" if ok else f"REGRESSION (bound {bound:.3f})"
+        print(f"{sec + '.' + key:52s} {got:10.3f} {base:10.3f}  {verdict}")
+        if not ok:
+            failures.append(f"{sec}.{key}: {got} vs bound {bound:.3f}")
+    for sec, key in INVARIANTS:
+        got = result[sec][key]
+        ok = bool(got) is True
+        print(f"{sec + '.' + key:52s} {str(got):>10s} {'true':>10s}  "
+              f"{'ok' if ok else 'BROKEN'}")
+        if not ok:
+            failures.append(f"{sec}.{key}: expected true, got {got}")
+    for sec, key in INFORMATIONAL:
+        got = result[sec][key]
+        base = baseline[sec].get(key, float("nan"))
+        print(f"{sec + '.' + key:52s} {got:10.3f} {base:10.3f}  info")
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: no perf regression against baseline")
+    return 0
+
+
+def main(argv):
+    result_path = argv[1] if len(argv) > 1 else "BENCH_serve.json"
+    base_path = argv[2] if len(argv) > 2 \
+        else "benchmarks/baseline_serve.json"
+    with open(result_path) as f:
+        result = json.load(f)
+    with open(base_path) as f:
+        baseline = json.load(f)
+    return check(result, baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

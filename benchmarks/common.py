@@ -14,8 +14,8 @@ the same number of optimization steps.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,11 +24,10 @@ import numpy as np
 from repro.configs.base import get_smoke_config
 from repro.core.router import RouterConfig
 from repro.data.partition import Partition, partition_dataset
-from repro.data.pipeline import LoaderConfig, ShardLoader, expert_loaders
+from repro.data.pipeline import LoaderConfig, ShardLoader
 from repro.data.synthetic import SyntheticConfig, SyntheticMultimodal
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
-from repro.serve.ensemble_engine import DecentralizedServer
 from repro.train.trainer import (TrainConfig, init_train_state,
                                  train_host_loop)
 

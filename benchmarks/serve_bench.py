@@ -17,9 +17,23 @@
    and the KV-memory ratio (the paged pool holds half the contiguous
    rows' worth of blocks here and still serves the queue, because slots
    only reserve the blocks they actually write).
+
+3. Chunked vs. monolithic prefill under bursty prompt load
+   (``run_chunked``): long-running decoders share the server with a burst
+   of long-prompt requests. Monolithic admission runs one stop-the-world
+   prefill per burst arrival — every decoder stalls for its full duration;
+   chunked prefill feeds the same prompts through the paged pool one chunk
+   per step, co-scheduled with the decode dispatch. Asserts exact greedy
+   parity, then reports the decoders' throughput-under-prefill-load
+   (the CI gate: chunked ≥ 1.3× monolithic) and mean burst TTFT.
+
+Run as a module (``python -m benchmarks.serve_bench``) to execute all
+three and write ``BENCH_serve.json`` — the artifact
+``benchmarks/check_regression.py`` gates CI on.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -158,11 +172,19 @@ def run_paged(_settings=None, *, n_requests: int = 24, n_slots: int = 8,
         return SlotServer(model, params, n_slots=n_slots,
                           cache_len=cache_len, serve_fns=fns_c)
 
-    # warm the shared jits outside the timed region
+    # warm the shared jits outside the timed region; then rep paired runs —
+    # the reported speedup is the median paired ratio (a single-shot ratio
+    # on a shared machine is far too noisy to gate CI on)
     bench(fresh(False)), bench(fresh(True))
-    out_c, tps_c = bench(fresh(False))
-    out_p, tps_p = bench(fresh(True))
-    assert out_c == out_p, "paged decode diverged from contiguous"
+    tps_c = tps_p = 0.0
+    ratios = []
+    for _ in range(3):
+        out_c, c = bench(fresh(False))
+        out_p, p = bench(fresh(True))
+        assert out_c == out_p, "paged decode diverged from contiguous"
+        tps_c, tps_p = max(tps_c, c), max(tps_p, p)
+        ratios.append(p / c)
+    speedup = sorted(ratios)[len(ratios) // 2]
 
     kv_rows = n_slots * cache_len                      # contiguous KV slots
     kv_pool = pool_blocks * page_block                 # paged pool slots
@@ -170,7 +192,7 @@ def run_paged(_settings=None, *, n_requests: int = 24, n_slots: int = 8,
         "requests": n_requests, "slots": n_slots, "max_new": max_new,
         "contiguous_tok_per_s": round(tps_c, 2),
         "paged_tok_per_s": round(tps_p, 2),
-        "paged_over_contiguous": round(tps_p / tps_c, 3),
+        "paged_over_contiguous": round(speedup, 3),
         "kv_memory_ratio": round(kv_pool / kv_rows, 3),
         "parity": True,
     }
@@ -184,6 +206,109 @@ def run_paged(_settings=None, *, n_requests: int = 24, n_slots: int = 8,
     return result
 
 
+def run_chunked(_settings=None, *, n_slots: int = 6, n_decoders: int = 4,
+                decode_prompt: int = 8, decode_new: int = 48,
+                n_burst: int = 32, burst_prompt: int = 64,
+                burst_new: int = 2, cache_len: int = 96,
+                page_block: int = 8, chunk: int = 16, reps: int = 3):
+    """Decode throughput under concurrent prompt arrivals.
+
+    ``n_decoders`` short-prompt long-budget requests occupy slots and
+    decode for the whole run; ``n_burst`` long-prompt short-budget requests
+    churn through the remaining slots. Monolithic admission stalls every
+    decoder for one full ``burst_prompt``-wide prefill per arrival; chunked
+    prefill rides one chunk per decode step. Reported decode throughput is
+    the decoders' tokens over the time until the LAST decoder finishes —
+    exactly the window the burst prefills compete in. The paired ratio is
+    the CI gate; the median of ``reps`` back-to-back pairs is robust to a
+    rep landing on a shared-machine load spike.
+    """
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    dec_prompts = [rng.integers(0, cfg.vocab, size=decode_prompt)
+                   .astype(np.int32) for _ in range(n_decoders)]
+    burst_prompts = [rng.integers(0, cfg.vocab, size=burst_prompt)
+                     .astype(np.int32) for _ in range(n_burst)]
+
+    def queue():
+        reqs = [Request(i, p, decode_new)
+                for i, p in enumerate(dec_prompts)]
+        reqs += [Request(n_decoders + i, p, burst_new)
+                 for i, p in enumerate(burst_prompts)]
+        return reqs
+
+    # share the jitted fns across reps (a fresh server per rep resets slot
+    # state; recompiling per rep would swamp the measurement)
+    from repro.serve.scheduler import make_chunk_fns, make_serve_fns
+    fns = make_serve_fns(model, cache_len, paged=True)
+    cfns = make_chunk_fns(model, cache_len, chunk, paged=True)
+
+    def fresh(chunked: bool):
+        return SlotServer(model, params, n_slots=n_slots,
+                          cache_len=cache_len, page_block=page_block,
+                          serve_fns=fns, chunk=chunk if chunked else 0,
+                          chunk_fns=cfns)
+
+    def bench(server):
+        reqs = queue()
+        t0 = time.perf_counter()
+        out = server.serve(reqs)
+        jax.block_until_ready(server.cache)
+        decoders = reqs[:n_decoders]
+        bursts = reqs[n_decoders:]
+        t_done = max(r.t_done for r in decoders) - t0
+        decode_tps = sum(len(r.out) for r in decoders) / t_done
+        ttft = float(np.mean([r.t_first - t0 for r in bursts]))
+        return out, decode_tps, ttft
+
+    bench(fresh(False)), bench(fresh(True))        # warm the jits
+    mono_tps = chunked_tps = 0.0
+    mono_ttft = chunked_ttft = float("inf")
+    ratios = []
+    for _ in range(reps):
+        out_m, tps_m, ttft_m = bench(fresh(False))
+        out_c, tps_c, ttft_c = bench(fresh(True))
+        assert out_c == out_m, "chunked prefill diverged from monolithic"
+        mono_tps, chunked_tps = max(mono_tps, tps_m), max(chunked_tps, tps_c)
+        mono_ttft = min(mono_ttft, ttft_m)
+        chunked_ttft = min(chunked_ttft, ttft_c)
+        ratios.append(tps_c / tps_m)
+    ratio = sorted(ratios)[len(ratios) // 2]
+
+    result = {
+        "decoders": n_decoders, "burst": n_burst,
+        "burst_prompt": burst_prompt, "chunk": chunk,
+        "monolithic_decode_tok_per_s": round(mono_tps, 2),
+        "chunked_decode_tok_per_s": round(chunked_tps, 2),
+        "chunked_over_monolithic": round(ratio, 3),
+        "monolithic_burst_ttft_s": round(mono_ttft, 4),
+        "chunked_burst_ttft_s": round(chunked_ttft, 4),
+        "parity": True,
+    }
+    print("\n== Serving: monolithic vs chunked prefill under burst ==")
+    print("name,decode_tok_per_s")
+    print(f"prefill_monolithic,{mono_tps:.2f}")
+    print(f"prefill_chunked,{chunked_tps:.2f}")
+    print(f"speedup,{result['chunked_over_monolithic']}")
+    print(f"burst_ttft_monolithic_s,{mono_ttft:.4f}")
+    print(f"burst_ttft_chunked_s,{chunked_ttft:.4f}")
+    print("parity,exact")
+    return result
+
+
+def main(out_path: str = "BENCH_serve.json"):
+    results = {
+        "serve_mixture": run(),
+        "serve_paged": run_paged(),
+        "serve_chunked": run_chunked(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+    print(f"\nwrote {out_path}")
+    return results
+
+
 if __name__ == "__main__":
-    run()
-    run_paged()
+    main()

@@ -7,8 +7,6 @@ weaker features ⇒ worse clusters ⇒ worse routing ⇒ lower ensemble scores.
 """
 from __future__ import annotations
 
-from dataclasses import replace
-
 from .common import BenchSettings, fmt_row, run_parity
 
 ENCODERS = {"vitL14_proxy_d64": 64, "vitB16_proxy_d32": 32,

@@ -9,8 +9,6 @@ per-expert load, balance).
 """
 from __future__ import annotations
 
-from typing import Dict
-
 import numpy as np
 from scipy.optimize import linear_sum_assignment
 

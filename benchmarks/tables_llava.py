@@ -41,7 +41,6 @@ def table2(res: ParityResult, s: BenchSettings) -> Dict[str, Dict[str, float]]:
 
         def route(self, feats):
             import jax
-            import jax.numpy as jnp
             noise = jax.random.normal(jax.random.PRNGKey(13), feats.shape)
             return self.inner.route(-feats + self.scale * noise)
 

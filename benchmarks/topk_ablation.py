@@ -5,11 +5,9 @@ the compute-matched point and the exact mixture. We measure ensemble NLL
 at k = 1, 2 (=K) and the uniform-mixture control."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.router import CentroidRouter, RouterConfig
-from repro.serve.ensemble_engine import DecentralizedServer
 
 from .common import BenchSettings, eval_metrics, fmt_row, run_parity
 

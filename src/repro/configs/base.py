@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import importlib
 from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
 
 import jax.numpy as jnp
 

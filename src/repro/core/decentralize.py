@@ -17,7 +17,6 @@ next-token distributions.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Sequence
 
 import jax.numpy as jnp
 import numpy as np

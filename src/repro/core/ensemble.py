@@ -16,7 +16,6 @@ selected expert's parameters instead of running all K.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -92,7 +91,7 @@ def stack_experts_for_decode(expert_params):
     axes = jax.tree.map(lambda _: 0, stacked)
 
     def layer_major(sub):
-        return (jax.tree.map(lambda l: jnp.moveaxis(l, 0, 1), sub),
+        return (jax.tree.map(lambda a: jnp.moveaxis(a, 0, 1), sub),
                 jax.tree.map(lambda _: 1, sub))
 
     if isinstance(stacked, dict) and "blocks" in stacked:
@@ -158,6 +157,53 @@ def make_stacked_serving(model, expert_params, cache_len: int, *,
             return mix_expert_logits(logits, weights), caches
 
     return stacked, param_axes, jax.jit(prefill_all), jax.jit(mix_decode)
+
+
+def make_stacked_chunk_fns(model, stacked, param_axes, cache_len: int,
+                           chunk: int, *, use_kernel: bool = False):
+    """Chunked-prefill companions to ``make_stacked_serving`` for the
+    stacked-expert mixture core.
+
+    Returns ``(prep_all, chunk_all)``:
+
+    * ``prep_all(stacked, batch)`` → (per-chunk tensors each (K, 1, C, D) —
+      every expert owns its embedding table, and pre-splitting at admission
+      keeps the chunk step dispatch-free — per-expert chunk carries with
+      the K dim at axis 1 of every leaf, the same slot the stacked cache
+      keeps it in, so ``CacheSpec.shifted(1).insert_direct`` splices the
+      finished carry without a transpose);
+    * ``chunk_all(stacked, caches, carry, xc, start, length, block_table,
+      weights)`` → (Eq. 27 mixed next-token probs (1, V) at the chunk's
+      last valid position, new carry, new caches) — ONE vmapped
+      ``prefill_chunk`` over the K dim; the block table is shared by all K
+      experts (``in_axes=None``), exactly like the paged decode path.
+
+    ``chunk_all`` is returned un-jitted so the mixture server can fuse it
+    with the decode step into a single dispatch; ``prep_all`` is jitted
+    (it runs once per admission, retracing per padded prompt width).
+    """
+    cache_axes = stacked_cache_axes(model.cache_shapes(1, cache_len))
+
+    def prep_all(stacked_p, batch):
+        x = jax.vmap(lambda p: model.embed_prompt(p, batch),
+                     in_axes=(param_axes,))(stacked_p)     # (K, 1, W, D)
+        chunks = tuple(jnp.split(x, x.shape[2] // chunk, axis=2))
+        carry = jax.vmap(
+            lambda p: model.init_chunk_carry(p, batch, cache_len),
+            in_axes=(param_axes,), out_axes=1)(stacked_p)
+        return chunks, carry
+
+    def chunk_all(stacked_p, caches, carry, xc, start, length, block_table,
+                  weights):
+        logits, carry, caches = jax.vmap(
+            lambda p, c, cr, x: model.prefill_chunk(
+                p, c, cr, x, start, length, block_table,
+                use_kernel=use_kernel),
+            in_axes=(param_axes, cache_axes, 1, 0),
+            out_axes=(0, 1, cache_axes))(stacked_p, caches, carry, xc)
+        return mix_expert_logits(logits, weights), carry, caches
+
+    return jax.jit(prep_all), chunk_all
 
 
 def select_expert_params(stacked_params, expert_idx: Array):

@@ -13,7 +13,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from .synthetic import SyntheticConfig, SyntheticMultimodal
+from .synthetic import SyntheticMultimodal
 
 
 @dataclass

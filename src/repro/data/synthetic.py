@@ -16,7 +16,7 @@ Everything is deterministic in the seed and generated lazily per batch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Optional
 
 import numpy as np
 

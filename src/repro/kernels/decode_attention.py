@@ -159,6 +159,115 @@ def _paged_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
                              jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _chunk_prefill_kernel(start_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *,
+                          scale: float, block: int, group: int, C: int):
+    """Prefix-aware chunked-prefill flash attention over PAGED blocks.
+
+    Rows are the chunk's (c, group) query pairs flattened c-major; row r is
+    the query at absolute position ``start + r // group``. ``ki`` is the
+    LOGICAL block index — the physical indirection already happened in the
+    index maps (scalar-prefetched block table), exactly like the paged
+    decode kernel. The chunk's own K/V were scattered into the pool before
+    the call, so the single fence ``key position ≤ query position`` covers
+    both the prefix and within-chunk causality.
+    """
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    start = start_ref[0]
+    # blocks entirely above the last query position are dead for every row
+    live = ki * block <= start + (C - 1)
+
+    @pl.when(live)
+    def _accum():
+        q = q_ref[0, :, :].astype(jnp.float32)         # (C·group, dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (block, dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        cols = ki * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= start + rows, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, :, :] = (acc_scr[...] /
+                          jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def chunk_prefill_attention(q: Array, k_pool: Array, v_pool: Array,
+                            start: Array, block_table: Array, *,
+                            interpret: bool = False) -> Array:
+    """q: (C,H,dh) one request's chunk queries; k_pool,v_pool:
+    (P,block,KV,dh) with the chunk's K/V already scattered in; start: ()
+    int32 absolute position of chunk row 0; block_table: (NB,) int32 →
+    (C,H,dh).
+
+    Grid = (kv_heads, NB logical blocks); ``start`` and the block table are
+    scalar-prefetch operands so the K/V index maps resolve the physical
+    block at DMA-issue time. Unallocated entries alias scratch block 0 and
+    are killed by the position fence.
+    """
+    C, H, dh = q.shape
+    block, KV = k_pool.shape[1], k_pool.shape[2]
+    NB = block_table.shape[0]
+    assert H % KV == 0
+    group = H // KV
+    scale = 1.0 / (dh ** 0.5)
+    # rows flattened c-major per KV head: (KV, C·group, dh)
+    qg = jnp.transpose(q.reshape(C, KV, group, dh), (1, 0, 2, 3)) \
+        .reshape(KV, C * group, dh)
+
+    kernel = functools.partial(_chunk_prefill_kernel, scale=scale,
+                               block=block, group=group, C=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                        # start, block_table
+        grid=(KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, C * group, dh),
+                         lambda h, ki, start_r, bt_r: (h, 0, 0)),       # q
+            pl.BlockSpec((1, block, 1, dh),
+                         lambda h, ki, start_r, bt_r:
+                         (bt_r[ki], 0, h, 0)),                          # k
+            pl.BlockSpec((1, block, 1, dh),
+                         lambda h, ki, start_r, bt_r:
+                         (bt_r[ki], 0, h, 0)),                          # v
+        ],
+        out_specs=pl.BlockSpec((1, C * group, dh),
+                               lambda h, ki, start_r, bt_r: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * group, 1), jnp.float32),
+            pltpu.VMEM((C * group, 1), jnp.float32),
+            pltpu.VMEM((C * group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((KV, C * group, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(start, jnp.int32).reshape(1),
+      block_table.astype(jnp.int32), qg, k_pool, v_pool)
+    return jnp.transpose(out.reshape(KV, C, group, dh),
+                         (1, 0, 2, 3)).reshape(C, H, dh)
+
+
 def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
                            pos: Array, block_tables: Array, *,
                            window: int = 0,

@@ -14,8 +14,6 @@ the ~16 MB/core budget, leaving room for double-buffered pipelines.
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import chunk_scan as _chunk
 from . import decode_attention as _decode
@@ -70,6 +69,13 @@ def paged_decode_attention(q, k_pool, v_pool, pos, block_tables, *,
     return _decode.paged_decode_attention(q, k_pool, v_pool, pos,
                                           block_tables, window=window,
                                           interpret=_interpret())
+
+
+@jax.jit
+def chunk_prefill_attention(q, k_pool, v_pool, start, block_table):
+    return _decode.chunk_prefill_attention(q, k_pool, v_pool, start,
+                                           block_table,
+                                           interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("temperature", "block_b"))

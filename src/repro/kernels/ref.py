@@ -6,7 +6,7 @@ against these.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,25 @@ def paged_decode_attention_ref(q: Array, k_pool: Array, v_pool: Array,
     v = v_pool[block_tables].reshape(B, NB * block, *v_pool.shape[2:])
     return decode_attention_ref(q, k, v, pos,
                                 window=NB * block if window > 0 else 0)
+
+
+def chunk_prefill_attention_ref(q: Array, k_pool: Array, v_pool: Array,
+                                start: Array, block_table: Array) -> Array:
+    """q: (C,H,dh) chunk queries (row c at absolute position start + c);
+    k_pool,v_pool: (P,block,KV,dh); block_table: (NB,) → (C,H,dh).
+
+    Definitionally: gather the request's logical KV span out of the pool,
+    then run the contiguous decode oracle treating the chunk rows as a
+    batch of single queries at positions start..start+C-1.
+    """
+    C = q.shape[0]
+    NB, block = block_table.shape[0], k_pool.shape[1]
+    k = k_pool[block_table].reshape(NB * block, *k_pool.shape[2:])
+    v = v_pool[block_table].reshape(NB * block, *v_pool.shape[2:])
+    kb = jnp.broadcast_to(k[None], (C,) + k.shape)
+    vb = jnp.broadcast_to(v[None], (C,) + v.shape)
+    pos = start + jnp.arange(C)
+    return decode_attention_ref(q, kb, vb, pos)
 
 
 def router_scores_ref(x: Array, centroids: Array,

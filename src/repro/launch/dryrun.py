@@ -20,7 +20,7 @@ import json
 import time
 import traceback
 from dataclasses import asdict, replace
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

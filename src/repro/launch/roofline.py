@@ -17,8 +17,8 @@ decentralized training directly from the compiled module.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -164,7 +164,6 @@ def active_params(cfg, total_params: int, model) -> int:
     """MoE: count routed experts at top_k/n_experts utilization."""
     if cfg.moe.n_experts == 0:
         return total_params
-    from repro.models.params import count_params
     specs = model.param_specs()
     expert_leaves = 0
     for path, leaf in _iter_specs(specs["blocks"]):

@@ -57,6 +57,17 @@ def main() -> None:
     ap.add_argument("--pool-blocks", type=int, default=0,
                     help="physical blocks in the pool per pod "
                          "(0 → full capacity: slots × blocks-per-slot + 1)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="consume prompts in fixed-size chunks written "
+                         "through the paged pool, co-scheduled with decode "
+                         "steps (no stop-the-world prefill; needs --paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt positions per prefill chunk "
+                         "(with --chunked-prefill)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="per-step token budget: decoding slots count 1 "
+                         "each, the chunk counts --prefill-chunk "
+                         "(0 → slots + chunk, co-scheduling always fits)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -96,7 +107,9 @@ def main() -> None:
             model, experts, router, n_slots=args.slots, cache_len=cache_len,
             strategy=args.strategy, use_kernel=args.use_kernel,
             page_block=args.page_block if args.paged else 0,
-            pool_blocks=args.pool_blocks)
+            pool_blocks=args.pool_blocks,
+            chunk=args.prefill_chunk if args.chunked_prefill else 0,
+            token_budget=args.token_budget)
         finished = server.serve(queue)
         out = np.stack([np.asarray(finished[i], dtype=np.int32)
                         for i in range(args.requests)])
@@ -132,6 +145,8 @@ def main() -> None:
         "strategy": args.strategy,
         "slots": args.slots if args.engine == "slots" else None,
         "paged": args.paged if args.engine == "slots" else None,
+        "chunked_prefill": (args.chunked_prefill
+                            if args.engine == "slots" else None),
         "use_kernel": args.use_kernel,
         "wall_s": round(dt, 2),
         "tok_per_s": round(args.requests * args.new_tokens / dt, 1),

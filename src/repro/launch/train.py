@@ -22,11 +22,9 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import ckpt
-from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import ARCH_IDS, get_smoke_config
 from repro.data.partition import partition_dataset
 from repro.data.pipeline import LoaderConfig, ShardLoader, expert_loaders
 from repro.data.synthetic import SyntheticConfig, SyntheticMultimodal

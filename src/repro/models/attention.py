@@ -220,6 +220,51 @@ def paged_decode_attention(params, x: Array, cfg,
     return proj, (k_pool, v_pool)
 
 
+def chunk_attention(params, x: Array, cfg, pool: Tuple[Array, Array],
+                    start: Array, length: Array, block_table: Array, *,
+                    use_kernel: bool = False):
+    """Chunked-prefill self-attention THROUGH the paged pool.
+
+    x: (1, C, D) chunk hidden states whose row c sits at absolute position
+    ``start + c``; pool K/V: (P, block, KV, dh) shared block pool;
+    ``length``: () int32 valid rows in this chunk (a final partial chunk is
+    right-padded to C); block_table: (NB,) int32 — THIS request's logical →
+    physical block map. Returns (out (1, C, D), new pool).
+
+    The chunk's K/V are scattered into the pool *first*, so within-chunk
+    causality flows through the same block-table read as the prefix written
+    by earlier chunks — one masking rule (key position ≤ query position)
+    covers both. Padded rows scatter into the reserved scratch block 0 and
+    their outputs are garbage the caller discards; padded keys sit at
+    positions no valid query can attend, so they never leak.
+    """
+    B, C, D = x.shape
+    k_pool, v_pool = pool
+    bs = k_pool.shape[1]
+    NB = block_table.shape[0]
+    S_log = NB * bs
+    offs = jnp.arange(C)
+    pos_c = start + offs                                     # (C,)
+    q, k_new, v_new = _qkv(params, x, cfg, pos_c[None, :])
+    valid = offs < length
+    blk = jnp.where(valid,
+                    block_table[jnp.clip(pos_c // bs, 0, NB - 1)], 0)
+    off = jnp.where(valid, pos_c % bs, 0)
+    k_pool = k_pool.at[blk, off].set(k_new[0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v_new[0].astype(v_pool.dtype))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.chunk_prefill_attention(q[0], k_pool, v_pool, start,
+                                           block_table)[None]
+    else:
+        kf = k_pool[block_table].reshape(S_log, *k_pool.shape[2:])[None]
+        vf = v_pool[block_table].reshape(S_log, *v_pool.shape[2:])[None]
+        mask = (jnp.arange(S_log)[None, :] <= pos_c[:, None])[None]
+        out = gqa_sdpa(q, kf, vf, mask, jnp.dtype(cfg.attn_softmax_dtype))
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return proj, (k_pool, v_pool)
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (enc-dec)
 # ---------------------------------------------------------------------------

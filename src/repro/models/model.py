@@ -19,7 +19,7 @@ periodically-applied *shared* attention block) scan over homogeneous groups.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import cached_property, partial
+from functools import cached_property
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -159,6 +159,22 @@ class CacheSpec:
 
         seq = self.paged.seq_axes
         return jax.tree.map(one, cache, row_cache, self.batch_axes, seq)
+
+    def insert_direct(self, cache, carry, slot: int):
+        """Write a chunked-prefill carry (single-request DIRECT-leaf decode
+        states; pool-leaf entries are placeholders — their data was written
+        straight into the block pool chunk by chunk) into the batched cache
+        at ``slot``. Without a paged layout every leaf is direct."""
+        seq = self.paged.seq_axes if self.paged is not None else \
+            jax.tree.map(lambda _: -1, self.batch_axes)
+
+        def one(full, row, ax, s_ax):
+            if s_ax >= 0:
+                return full
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, row.astype(full.dtype), slot, axis=ax)
+
+        return jax.tree.map(one, cache, carry, self.batch_axes, seq)
 
     def take(self, cache, slot: int):
         """Read one slot's cache back out (batch extent 1 preserved)."""
@@ -370,9 +386,9 @@ class Model:
             Np = cfg.n_patches
             logits = logits[:, Np:]
         mask = batch.get("loss_mask")
-        l = cross_entropy_loss(logits[:, :-1], labels[:, 1:],
-                               None if mask is None else mask[:, 1:])
-        return l, {"loss": l}
+        nll = cross_entropy_loss(logits[:, :-1], labels[:, 1:],
+                                 None if mask is None else mask[:, 1:])
+        return nll, {"loss": nll}
 
     # ------------------------------------------------------------------
     # Decode state (KV caches / recurrent states)
@@ -580,6 +596,223 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
         return logits, cache
+
+    # ------------------------------------------------------------------
+    # Chunked prefill: consume a prompt in fixed-size chunks
+    # ------------------------------------------------------------------
+
+    def embed_prompt(self, params, batch) -> Array:
+        """Embedded decoder inputs for chunked prefill: token embeddings
+        plus any modality prefix (VLM image projection). (1, W, D)."""
+        return self._embed_inputs(params, batch)
+
+    def init_chunk_carry(self, params, batch, cache_len: int):
+        """Per-request carry threaded between prefill chunks: the DIRECT
+        (non-pool) decode-state leaves at batch extent 1, at their true
+        initial values. Pool leaves get (1,)-shaped placeholders — their
+        chunk writes go straight into the shared block pool. Audio computes
+        its cross-attention KV here, once per request instead of per chunk.
+        """
+        cfg = self.cfg
+        dummy = jnp.zeros((1,), cfg.cdtype)
+        if cfg.family in ("dense", "vlm", "moe"):
+            return {"k": dummy, "v": dummy}
+        if cfg.family == "audio":
+            enc_out = self._encode_audio(params, batch["frames"])
+
+            def body(c, layer):
+                return c, attn.encode_kv(layer["cross_attn"], enc_out, cfg)
+
+            _, (xks, xvs) = scan_layers(body, 0, params["blocks"], cfg)
+            return {"k": dummy, "v": dummy, "xk": xks, "xv": xvs}
+        if cfg.family == "ssm":
+            G, gm = self.n_groups, self.group_m
+            s_shapes = ssm_lib.slstm_state_shapes(cfg, 1)
+            slstm = [jnp.zeros((G,) + s, jnp.float32) for s in s_shapes]
+            slstm[2] = jnp.full((G,) + s_shapes[2], -1e30, jnp.float32)
+            return {"mlstm": jnp.zeros(
+                        (G, gm) + ssm_lib.mlstm_state_shape(cfg, 1),
+                        jnp.float32),
+                    "slstm": tuple(slstm)}
+        if cfg.family == "hybrid":
+            G, gm = self.n_groups, self.group_m
+            ssm_s, conv_s = ssm_lib.mamba2_state_shapes(cfg, 1)
+            return {"ssm": jnp.zeros((G, gm) + ssm_s, jnp.float32),
+                    "conv": jnp.zeros((G, gm) + conv_s, cfg.cdtype),
+                    "k": dummy, "v": dummy}
+        raise ValueError(cfg.family)
+
+    def prefill_chunk(self, params, cache, carry, x: Array, start: Array,
+                      length: Array, block_table: Array, *,
+                      use_kernel: bool = False):
+        """Consume one chunk of a prompt. x: (1, C, D) embedded inputs
+        (``embed_prompt`` output sliced at ``start``, right-padded to C);
+        start: () int32 absolute position of chunk row 0; length: () int32
+        valid rows; block_table: (NB,) int32 — this request's block map
+        (unused by families without pageable leaves).
+
+        Attention KV leaves are written straight into the paged pool
+        (``attn.chunk_attention``) and attend over the previously-inserted
+        blocks; recurrent / conv / cross-attention state flows through
+        ``carry``. Returns (last_logits (1, V) — the greedy next-token
+        distribution at the chunk's final valid position — new_carry,
+        new_cache). Padded rows are exact no-ops on carry and pool.
+        """
+        cfg = self.cfg
+        C = x.shape[1]
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(xh, layer_and_pool):
+                layer, pool = layer_and_pool
+                a, pool = attn.chunk_attention(
+                    layer["attn"], rms_norm(xh, layer["ln1"], cfg.norm_eps),
+                    cfg, pool, start, length, block_table,
+                    use_kernel=use_kernel)
+                h = xh + a
+                y = rms_norm(h, layer["ln2"], cfg.norm_eps)
+                out = h + (moe_lib.moe_ffn(layer["moe"], y, cfg)
+                           if cfg.family == "moe" else swiglu(layer["ffn"], y))
+                return out, pool
+            x, (ks, vs) = scan_layers(
+                body, x, (params["blocks"], (cache["k"], cache["v"])), cfg)
+            new_cache = {"k": ks, "v": vs}
+            new_carry = carry
+
+        elif cfg.family == "audio":
+            def body(xh, layer_and_c):
+                layer, (k, v, xk, xv) = layer_and_c
+                a, kv = attn.chunk_attention(
+                    layer["self_attn"],
+                    rms_norm(xh, layer["ln1"], cfg.norm_eps),
+                    cfg, (k, v), start, length, block_table,
+                    use_kernel=use_kernel)
+                h = xh + a
+                h = h + attn.cross_attention(
+                    layer["cross_attn"],
+                    rms_norm(h, layer["ln2"], cfg.norm_eps), (xk, xv), cfg)
+                out = h + swiglu(layer["ffn"],
+                                 rms_norm(h, layer["ln3"], cfg.norm_eps))
+                return out, kv
+            x, (ks, vs) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["k"], cache["v"], carry["xk"],
+                           carry["xv"])), cfg)
+            new_cache = {"k": ks, "v": vs,
+                         "xk": cache["xk"], "xv": cache["xv"]}
+            new_carry = carry
+
+        elif cfg.family == "ssm":
+            valid = jnp.arange(C) < length
+
+            def body(xh, group_and_state):
+                group, (m_st, s_st) = group_and_state
+
+                def m_body(h, mc):
+                    m, st = mc
+                    q, k, v, log_f, z = ssm_lib._mlstm_qkvg(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), cfg)
+                    k = k * valid[None, :, None, None].astype(k.dtype)
+                    log_f = jnp.where(valid[None, :, None], log_f, 0.0)
+                    v_ext = jnp.concatenate(
+                        [v, jnp.ones_like(v[..., :1])], -1)
+                    y, st = ssm_lib.chunked_linear_attention(
+                        q, k, v_ext, log_f, cfg.ssm.chunk, state=st,
+                        use_kernel=use_kernel)
+                    num, den = y[..., :-1], y[..., -1:]
+                    hh = (num / (jnp.abs(den) + 1.0)).reshape(1, C, -1)
+                    hh = rms_norm(hh, m["core"]["norm"], cfg.norm_eps) \
+                        * jax.nn.silu(z)
+                    return h + hh @ m["core"]["w_out"].astype(h.dtype), st
+                xh, m_st = scan_layers(
+                    m_body, xh,
+                    ({"ln": group["m_ln"], "core": group["mlstm"]}, m_st),
+                    cfg)
+                y, s_st = ssm_lib.slstm_scan(
+                    group["slstm"], rms_norm(xh, group["s_ln"], cfg.norm_eps),
+                    cfg, state=s_st, length=length)
+                return xh + y, (m_st, s_st)
+            x, (m_states, s_states) = scan_layers(
+                body, x, (params["blocks"],
+                          (carry["mlstm"], carry["slstm"])), cfg)
+            new_carry = {"mlstm": m_states, "slstm": s_states}
+            new_cache = cache
+
+        elif cfg.family == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(xh, group_and_c):
+                group, (ssm_st, conv_st, k, v) = group_and_c
+
+                def m_body(h, mc):
+                    m, st = mc
+                    y, st = self._mamba2_chunk(
+                        m["core"], rms_norm(h, m["ln"], cfg.norm_eps), st,
+                        length, use_kernel)
+                    return h + y, st
+                xh, (ssm_st, conv_st) = scan_layers(
+                    m_body, xh,
+                    ({"ln": group["m_ln"], "core": group["mamba"]},
+                     (ssm_st, conv_st)), cfg)
+                a, kv = attn.chunk_attention(
+                    shared["attn"], rms_norm(xh, shared["ln1"], cfg.norm_eps),
+                    cfg, (k, v), start, length, block_table,
+                    use_kernel=use_kernel)
+                h = xh + a
+                out = h + swiglu(shared["ffn"],
+                                 rms_norm(h, shared["ln2"], cfg.norm_eps))
+                return out, (ssm_st, conv_st) + kv
+            x, (ssm_s, conv_s, ks, vs) = scan_layers(
+                body, x, (params["blocks"],
+                          (carry["ssm"], carry["conv"],
+                           cache["k"], cache["v"])), cfg)
+            new_carry = {"ssm": ssm_s, "conv": conv_s,
+                         "k": carry["k"], "v": carry["v"]}
+            new_cache = {"ssm": cache["ssm"], "conv": cache["conv"],
+                         "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        h_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        logits = unembed(params["embed"], h_last, cfg.tie_embeddings,
+                         cfg.vocab)
+        return logits[:, 0], new_carry, new_cache
+
+    def _mamba2_chunk(self, p, x, state, length, use_kernel):
+        """``_mamba2_prefill`` with an inter-chunk carry: the conv window
+        and SSM state flow in from the previous chunk, and padded positions
+        (≥ length) are exact no-ops on both (dt → 0 ⇒ zero k and unit
+        decay; the conv carry is sliced at the valid end)."""
+        cfg = self.cfg
+        ssm_state, conv_carry = state
+        xs, z, Bm, Cm, dt_raw, (B, S, Di, N, H, P) = \
+            ssm_lib._mamba2_inner(p, x, cfg)
+        conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+        W = p["conv_w"].shape[0]
+        conv_out, _ = ssm_lib._causal_conv(
+            conv_in, p["conv_w"].astype(x.dtype), conv_carry)
+        if W > 1:
+            ext = jnp.concatenate([conv_carry, conv_in], axis=1)
+            conv_carry = jax.lax.dynamic_slice_in_dim(ext, length, W - 1,
+                                                      axis=1)
+        xs, Bm, Cm = jnp.split(conv_out, [Di, Di + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                             p["dt_bias"].astype(jnp.float32))
+        dt = jnp.where((jnp.arange(S) < length)[None, :, None], dt, 0.0)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        log_g = dt * A[None, None, :]
+        q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+        k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N)) * \
+            dt[..., None].astype(x.dtype)
+        v = xs.reshape(B, S, H, P)
+        y, st = ssm_lib.chunked_linear_attention(q, k, v, log_g,
+                                                 cfg.ssm.chunk,
+                                                 state=ssm_state,
+                                                 use_kernel=use_kernel)
+        y = y + p["D_skip"].astype(x.dtype)[None, None, :, None] * v
+        y = y.reshape(B, S, Di) * jax.nn.silu(z)
+        y = rms_norm(y, p["norm"], cfg.norm_eps)
+        return y @ p["w_out"].astype(x.dtype), (st, conv_carry)
 
     def _mamba2_prefill(self, p, x, use_kernel):
         """mamba2_block that also returns (ssm_state, conv_carry)."""

@@ -8,8 +8,8 @@ pjit (``tree_pspecs``), and (3) ``ShapeDtypeStruct`` trees for the dry-run
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -186,13 +186,17 @@ def slstm_specs(cfg) -> Dict[str, ParamSpec]:
     }
 
 
-def slstm_scan(params, x: Array, cfg, state=None):
+def slstm_scan(params, x: Array, cfg, state=None, length=None):
     """Sequential sLSTM with stabilized exponential gating.
 
     state: (c, n, m, h) each (B, Di). Returns (y (B,S,D), state).
     Recurrence is diagonal (elementwise h_{t-1} feedback) — a documented
     simplification of the paper's block-diagonal recurrent matrix that keeps
     the sequential structure (what matters for sharding/roofline).
+
+    ``length`` (() int32, optional) freezes the state past position
+    ``length`` — chunked prefill right-pads its final chunk, and the padded
+    steps must be exact no-ops on the carried state.
     """
     dt = x.dtype
     B, S, D = x.shape
@@ -204,7 +208,8 @@ def slstm_scan(params, x: Array, cfg, state=None):
         z0 = jnp.zeros((B, Di), jnp.float32)
         state = (z0, z0, jnp.full((B, Di), -1e30, jnp.float32), z0)
 
-    def step(carry, pre_t):
+    def step(carry, inputs):
+        pre_t, t = inputs
         c, n, m, h = carry
         g = pre_t + r[None, :] * jnp.tile(h, (1, 4))
         i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
@@ -215,9 +220,16 @@ def slstm_scan(params, x: Array, cfg, state=None):
         c_new = f_g * c + i_g * jnp.tanh(z_pre)
         n_new = f_g * n + i_g
         h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+        if length is not None:
+            keep = t < length
+            c_new, n_new, m_new, h_new = (
+                jnp.where(keep, new, old)
+                for new, old in ((c_new, c), (n_new, n), (m_new, m),
+                                 (h_new, h)))
         return (c_new, n_new, m_new, h_new), h_new
 
-    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    state, hs = jax.lax.scan(step, state,
+                             (jnp.moveaxis(pre, 1, 0), jnp.arange(S)))
     hs = jnp.moveaxis(hs, 0, 1).astype(dt)                    # (B,S,Di)
     hs = rms_norm(hs, params["norm"], cfg.norm_eps)
     return hs @ params["w_out"].astype(dt), state

@@ -3,8 +3,7 @@ caches / recurrent state, plus a sampled generation loop."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

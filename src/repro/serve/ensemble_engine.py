@@ -18,7 +18,7 @@ parameter-free centroid router runs at the front end on the request's frozen
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

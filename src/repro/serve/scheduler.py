@@ -1,11 +1,27 @@
 """Continuous batching: slot-based request schedulers over the decode core
-(vLLM-style, with optional paged KV caching).
+(vLLM-style, with paged KV caching and chunked-prefill co-scheduling).
 
 Requests arrive with different prompt lengths and budgets; a server admits
-each into a free slot (single-row prefill, inserted into the batched cache
-at the slot index via the model's ``CacheSpec``), decodes ALL active slots
-in lockstep with a per-slot position vector, and retires finished requests —
-so new work never waits for the longest running request.
+each into a free slot, decodes ALL active slots in lockstep with a per-slot
+position vector, and retires finished requests — so new work never waits
+for the longest running request. Two admission modes:
+
+* **monolithic** (``chunk=0``) — admission runs one single-row prefill and
+  inserts the decode state into the batched cache via the model's
+  ``CacheSpec``. Simple, but every active decode slot stalls for the full
+  prefill of each arriving prompt.
+* **chunked** (``chunk>0``) — admission only embeds the prompt (pre-split
+  into per-chunk tensors) and reserves its KV blocks; the step loop then
+  consumes the prompt ``chunk`` positions at a time, written straight into
+  the paged pool through the slot's block table
+  (``attn.chunk_attention`` / the prefix-aware flash kernel), with
+  recurrent / conv / cross-attention state threaded through a per-request
+  carry. Each chunk rides the SAME jitted dispatch as the lockstep decode
+  (safe: decode writes and chunk writes touch disjoint physical blocks,
+  and the chunk's truth lives in its carry). A ``token_budget`` bounds the
+  per-step token work — decoding slots count 1 each, the chunk counts
+  ``chunk`` — so decode throughput under bursty prompt arrivals is bounded
+  below by construction instead of collapsing to zero during prefills.
 
 Every cache family is supported: the model's cache descriptor says where
 each cache leaf's slot axis lives, so the same admission/step machinery
@@ -50,6 +66,7 @@ request's frozen-encoder features and either
 from __future__ import annotations
 
 import logging
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -57,7 +74,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ensemble import make_stacked_serving, mix_expert_logits
+from repro.core.ensemble import (make_stacked_chunk_fns, make_stacked_serving,
+                                 mix_expert_logits)
 from repro.models.model import Model
 
 Array = jnp.ndarray
@@ -76,24 +94,33 @@ class Request:
     #                             # (vlm), "frames" (audio)
     out: List[int] = field(default_factory=list)
     truncated: bool = False       # retired at the context bound, not done
+    t_first: float = 0.0          # perf_counter at the first emitted token
+    t_done: float = 0.0           # perf_counter at retirement
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new
 
-    def batch(self) -> Dict[str, Array]:
-        """Single-row prefill batch (tokens + modality extras)."""
-        b = {"tokens": jnp.asarray(self.tokens[None, :]),
-             "labels": jnp.zeros((1, len(self.tokens)), jnp.int32)}
+    def batch(self, pad_to: int = 0) -> Dict[str, Array]:
+        """Single-row prefill batch (tokens + modality extras). ``pad_to``
+        right-pads the token row to that length (chunked prefill rounds the
+        prompt up to a whole number of chunks; padded rows are masked)."""
+        toks = self.tokens
+        if pad_to > len(toks):
+            toks = np.concatenate(
+                [toks, np.zeros(pad_to - len(toks), np.int32)])
+        b = {"tokens": jnp.asarray(toks[None, :]),
+             "labels": jnp.zeros((1, len(toks)), jnp.int32)}
         for name, v in self.extras.items():
             b[name] = jnp.asarray(np.asarray(v)[None])
         return b
 
 
-def _raise_dropped(dropped: List[int], n_finished: int,
+def _raise_dropped(dropped: List[str], n_finished: int,
                    max_steps: int) -> None:
     """Exhausting the drive loop with unfinished requests is never a silent
-    drop: log the count, then raise."""
+    drop: log the count (with each request's progress — queued, decode
+    position, or partial prefill position), then raise."""
     logger.error(
         "serve() exhausted max_steps=%d: dropping %d unfinished "
         "request(s) %s (%d finished)", max_steps, len(dropped), dropped,
@@ -138,15 +165,37 @@ class BlockAllocator:
 class _SlotTable:
     """Slot bookkeeping + the continuous-admission drive loop shared by the
     single-engine and stacked-mixture servers. With ``block_size > 0`` it
-    also owns the paged-cache block tables and allocator."""
+    also owns the paged-cache block tables and allocator; with ``chunk > 0``
+    it runs chunked-prefill continuous batching: admission only embeds the
+    prompt and reserves its blocks, and each scheduler step co-schedules one
+    prefill chunk (FCFS over mid-prefill slots) with the lockstep decode of
+    every decoding slot in a single jitted dispatch, subject to
+    ``token_budget`` (decode slots count 1 token each, the chunk counts
+    ``chunk``; 0 → n_slots + chunk, so co-scheduling always fits)."""
 
     def __init__(self, n_slots: int, cache_len: int, *, block_size: int = 0,
-                 n_blocks: int = 0, window: int = 0):
+                 n_blocks: int = 0, window: int = 0, chunk: int = 0,
+                 token_budget: int = 0):
         self.n_slots, self.cache_len = n_slots, cache_len
         self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.last_tok = np.zeros(n_slots, dtype=np.int32)
         self.admit_retired: List[Request] = []  # retired without a slot
+        self.chunk = chunk
+        self.chunked = chunk > 0
+        if self.chunked and window > 0:
+            raise ValueError(
+                "chunked prefill does not support sliding-window (ring) "
+                "caches yet — serve windowed configs with monolithic "
+                "admission")
+        self.token_budget = token_budget if token_budget > 0 \
+            else n_slots + chunk
+        self.prefilling = [False] * n_slots
+        self.prefill_pos = np.zeros(n_slots, dtype=np.int32)
+        self.prefill_width = np.zeros(n_slots, dtype=np.int32)
+        self.prefill_x: List[Any] = [None] * n_slots   # per-chunk tensors
+        self.prefill_carry: List[Any] = [None] * n_slots
+        self.prefill_order: List[int] = []      # FCFS over mid-prefill slots
         self.block_size = block_size
         self.paged = block_size > 0
         if self.paged:
@@ -173,6 +222,13 @@ class _SlotTable:
     def active(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is not None]
 
+    @property
+    def decoding(self) -> List[int]:
+        """Slots in the lockstep decode (mid-prefill slots are excluded —
+        their truth lives in the chunk carry, not the batched cache)."""
+        return [i for i, r in enumerate(self.slot_req)
+                if r is not None and not self.prefilling[i]]
+
     def admit(self, req: Request) -> bool:
         raise NotImplementedError
 
@@ -188,17 +244,20 @@ class _SlotTable:
             w += self.model.cfg.n_patches          # image prefix
         return w
 
-    def _admission_precheck(self, req: Request, slot: int,
-                            width: int) -> bool:
-        """Runs BEFORE the prefill is paid for. False → can't admit right
-        now (pool has no blocks free: the request stays pending). A prompt
-        that exceeds the serving context is malformed and rejected loudly —
-        the cache row cannot even hold its prefill."""
+    def _reject_overlong(self, req: Request, width: int) -> None:
+        """A prompt that exceeds the serving context is malformed and
+        rejected loudly — the cache cannot even hold its prefill."""
         if width > self.cache_len:
             raise ValueError(
                 f"request {req.rid}: prompt needs {width} positions but the "
                 f"serving context is cache_len={self.cache_len} — reject "
                 f"the request or raise cache_len")
+
+    def _admission_precheck(self, req: Request, slot: int,
+                            width: int) -> bool:
+        """Runs BEFORE the prefill is paid for. False → can't admit right
+        now (pool has no blocks free: the request stays pending)."""
+        self._reject_overlong(req, width)
         if self.paged and width < self.cache_len and \
                 not self._reserve(slot, width):
             return False
@@ -207,7 +266,9 @@ class _SlotTable:
     def _admit_prefilled(self, slot: int, req: Request, first: int,
                          width: int, row_cache) -> None:
         """Insert an admitted request's prefill state (paged or contiguous)
-        and occupy its slot."""
+        and occupy its slot. A request whose whole budget is the prefill
+        token (max_new == 1) retires immediately — the slot must not decode
+        a token past its budget."""
         if self.paged:
             blocks = jnp.asarray(
                 self.block_tables[slot, :int(self.n_alloc[slot])])
@@ -216,6 +277,9 @@ class _SlotTable:
         else:
             self.cache = self.spec.insert(self.cache, row_cache, slot)
         self._occupy(slot, req, first, width)
+        if req.done:                     # max_new == 1
+            self._retire_from_slot(slot, req, truncated=False)
+            self.admit_retired.append(req)
 
     # ------------------------------------------------------------------
     # Paged-cache bookkeeping
@@ -239,11 +303,11 @@ class _SlotTable:
         return True
 
     def _grow_active(self) -> None:
-        """Before a lockstep decode step: make sure every active slot owns
-        the block its next write position lands in."""
+        """Before a lockstep decode step: make sure every decoding slot
+        owns the block its next write position lands in."""
         if not self.paged or self.ring:
             return
-        for slot in self.active:
+        for slot in self.decoding:
             if not self._reserve(slot, int(self.pos[slot]) + 1):
                 req = self.slot_req[slot]
                 raise RuntimeError(
@@ -267,6 +331,8 @@ class _SlotTable:
         """The prompt already fills the context bound: the request keeps its
         single prefill token and retires without ever holding a slot."""
         req.out.append(first_tok)
+        req.t_first = req.t_first or time.perf_counter()
+        req.t_done = time.perf_counter()
         req.truncated = not req.done
         self.admit_retired.append(req)
 
@@ -281,26 +347,148 @@ class _SlotTable:
     def _occupy(self, slot: int, req: Request, first_tok: int,
                 prompt_len: int) -> None:
         req.out.append(first_tok)
+        req.t_first = req.t_first or time.perf_counter()
         self.slot_req[slot] = req
         self.pos[slot] = prompt_len
         self.last_tok[slot] = first_tok
 
     def _advance(self, next_tok: np.ndarray) -> List[Request]:
-        """Record one decoded token per active slot; retire finished
+        """Record one decoded token per decoding slot; retire finished
         requests (capacity-exact: position cache_len - 1 is decodable).
         A capacity retirement marks the request ``truncated``.
-        next_tok: (n_slots,) int32 (inactive rows ignored)."""
+        next_tok: (n_slots,) int32 (inactive/prefilling rows ignored)."""
         retired = []
-        for slot in self.active:
+        for slot in self.decoding:
             req = self.slot_req[slot]
             req.out.append(int(next_tok[slot]))
             self.pos[slot] += 1
             self.last_tok[slot] = next_tok[slot]
             if req.done or self.pos[slot] >= self.cache_len:
-                req.truncated = not req.done
+                self._retire_from_slot(slot, req, truncated=not req.done)
                 retired.append(req)
-                self._release(slot)
         return retired
+
+    def _retire_from_slot(self, slot: int, req: Request, *,
+                          truncated: bool) -> None:
+        """Finalize a request that currently holds ``slot``: stamp, flag,
+        release the slot (and its blocks)."""
+        req.truncated = truncated
+        req.t_done = time.perf_counter()
+        self._release(slot)
+
+    # ------------------------------------------------------------------
+    # Chunked prefill: admission, chunk scheduling, decode transition
+    # ------------------------------------------------------------------
+
+    def _admit_chunked(self, req: Request, slot: int, width: int,
+                       prep) -> bool:
+        """Shared chunked admission: validate, reserve the prompt's blocks
+        (the WHOLE width up front, so a chunk can never strand mid-prompt
+        on an exhausted pool), embed + pre-split + build the carry via
+        ``prep(batch)``, and park the slot mid-prefill. False → pool can't
+        reserve right now; the request stays pending."""
+        self._reject_overlong(req, width)
+        if self.paged and not self._reserve(slot, width):
+            return False
+        pad = -width % self.chunk
+        b = req.batch(pad_to=len(req.tokens) + pad)
+        chunks, carry = prep(b)
+        self._occupy_prefilling(slot, req, width, chunks, carry)
+        return True
+
+    def _occupy_prefilling(self, slot: int, req: Request, width: int,
+                           x, carry) -> None:
+        """Hold a slot in the mid-prefill state: the embedded prompt (as a
+        tuple of per-chunk tensors) and the chunk carry are per-slot host
+        state, the slot's block table already covers the prompt, and its
+        decode-side rows stay inert (pos 0, table masked to scratch) until
+        the transition."""
+        self.slot_req[slot] = req
+        self.prefilling[slot] = True
+        self.prefill_pos[slot] = 0
+        self.prefill_width[slot] = width
+        self.prefill_x[slot] = x
+        self.prefill_carry[slot] = carry
+        self.prefill_order.append(slot)
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+
+    def _decode_tables(self) -> np.ndarray:
+        """Block tables as the decode dispatch must see them: mid-prefill
+        slots are masked to the scratch block so the lockstep decode's
+        writes for those rows can never touch the blocks their chunks are
+        filling."""
+        if not self.prefill_order:
+            return self.block_tables
+        bt = self.block_tables.copy()
+        bt[self.prefill_order] = 0
+        return bt
+
+    def _schedule_chunk(self) -> bool:
+        """Token-budget admission of one prefill chunk into this step:
+        decoding slots count one token each and always run (starvation
+        freedom for decodes); the chunk rides along when it fits the budget,
+        and runs alone when nothing is decoding."""
+        if not self.prefill_order:
+            return False
+        n_dec = len(self.decoding)
+        return n_dec == 0 or n_dec + self.chunk <= self.token_budget
+
+    def _chunk_args(self):
+        """(slot, x_chunk, start, length, block_table) for the FCFS-first
+        mid-prefill slot. The prompt was pre-split into chunk tensors at
+        admission, so picking this step's chunk costs no dispatch;
+        ``length`` masks the final chunk's padding."""
+        slot = self.prefill_order[0]
+        start = int(self.prefill_pos[slot])
+        length = min(self.chunk, int(self.prefill_width[slot]) - start)
+        xc = self.prefill_x[slot][start // self.chunk]
+        cbt = jnp.asarray(self.block_tables[slot]) if self.paged \
+            else jnp.zeros((1,), jnp.int32)
+        return slot, xc, start, length, cbt
+
+    def _after_chunk(self, slot: int, length: int, c_out) -> List[Request]:
+        """Advance a slot's prefill by one chunk; on the final chunk take
+        the first greedy token from the chunk's last valid position, splice
+        the carry's direct-leaf state into the batched cache, and transition
+        the slot to decode (or retire, for context-filling prompts and
+        max_new == 1)."""
+        self.prefill_pos[slot] += length
+        if int(self.prefill_pos[slot]) < int(self.prefill_width[slot]):
+            return []
+        req = self.slot_req[slot]
+        first = int(jnp.argmax(c_out[0]))
+        width = int(self.prefill_width[slot])
+        self.prefill_order.remove(slot)
+        self.prefilling[slot] = False
+        self.prefill_x[slot] = None
+        carry, self.prefill_carry[slot] = self.prefill_carry[slot], None
+        if width >= self.cache_len:      # prompt fills the context bound
+            req.out.append(first)
+            req.t_first = req.t_first or time.perf_counter()
+            self._retire_from_slot(slot, req, truncated=not req.done)
+            return [req]
+        self.cache = self.spec.insert_direct(self.cache, carry, slot)
+        self._occupy(slot, req, first, width)
+        if req.done:                     # max_new == 1
+            self._retire_from_slot(slot, req, truncated=False)
+            return [req]
+        return []
+
+    def _drop_details(self) -> List[str]:
+        """Progress annotation for every request still holding a slot — a
+        mid-prefill request reports its partial position (it is neither
+        queued nor decoding, and used to fall through drop accounting)."""
+        out = []
+        for slot, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            if self.prefilling[slot]:
+                out.append(f"{r.rid} (prefill {int(self.prefill_pos[slot])}"
+                           f"/{int(self.prefill_width[slot])})")
+            else:
+                out.append(f"{r.rid} (decode pos {int(self.pos[slot])})")
+        return out
 
     def serve(self, queue: List[Request], *, max_steps: int = 10_000
               ) -> Dict[int, List[int]]:
@@ -309,7 +497,9 @@ class _SlotTable:
         Admission can fail transiently on a paged server (not enough free
         KV blocks yet) — the request stays pending until retirements free
         blocks. Exhausting ``max_steps`` with unfinished requests raises
-        (never a silent drop); the drop count is logged first.
+        (never a silent drop); every unfinished request is reported with its
+        progress, including mid-prefill requests with their partial
+        position.
         """
         pending = list(queue)
         finished: Dict[int, List[int]] = {}
@@ -328,8 +518,8 @@ class _SlotTable:
                     f"server — the KV block pool is too small for it")
             for req in self.step():
                 finished[req.rid] = req.out
-        dropped = [r.rid for r in pending] + \
-            [r.rid for r in self.slot_req if r is not None]
+        dropped = [f"{r.rid} (queued)" for r in pending] + \
+            self._drop_details()
         if dropped:
             _raise_dropped(dropped, len(finished), max_steps)
         return finished
@@ -344,6 +534,70 @@ def effective_page_block(model: Model, page_block: int) -> int:
     seq_axes = model.cache_spec(page_block).paged.seq_axes
     return page_block if any(a >= 0 for a in jax.tree.leaves(seq_axes)) \
         else 0
+
+
+def _validate_chunked(model: Model, paged: bool, chunk: int) -> None:
+    """Configuration fences for chunked prefill. Attention families write
+    their prompt KV through the block pool, so paging is mandatory for
+    them; recurrent chunk boundaries must align with the chunkwise-scan
+    length or the inter-chunk state recombination reassociates the float
+    reductions and greedy parity with monolithic prefill is lost."""
+    cfg = model.cfg
+    has_pool = any(a >= 0 for a in
+                   jax.tree.leaves(model.cache_spec(1).paged.seq_axes))
+    if has_pool and not paged:
+        raise ValueError(
+            "chunked prefill writes prompt KV through the paged pool — "
+            "enable paging (page_block > 0)")
+    if cfg.family in ("ssm", "hybrid") and chunk % cfg.ssm.chunk:
+        raise ValueError(
+            f"prefill chunk {chunk} must be a multiple of the "
+            f"chunkwise-scan length {cfg.ssm.chunk} for exact "
+            f"chunked-vs-monolithic parity on family '{cfg.family}'")
+
+
+def make_chunk_fns(model: Model, cache_len: int, chunk: int, *,
+                   use_kernel: bool = False, paged: bool = False):
+    """The jitted chunked-prefill function family one SlotServer runs on
+    (shared across the pods of a top-1 DecentralizedSlotServer, like
+    ``make_serve_fns``): admission prep (embed the padded prompt, pre-split
+    it into per-chunk tensors — so a chunk step issues NO eager slicing —
+    and build the carry, all in one dispatch), the FUSED step — decode
+    every decoding slot AND consume one prefill chunk in a single dispatch
+    — and the chunk-only step for a server with nothing decoding. ``prep``
+    retraces once per distinct padded prompt width (widths are rounded to
+    whole chunks, so the bucket count stays small).
+
+    The fusion is safe with zero ordering constraints because the two
+    halves touch disjoint state: decode writes land in the decoding slots'
+    own physical blocks (the chunk slot's table row is masked to scratch),
+    the chunk writes land in its own reserved blocks, and the chunk's
+    recurrent state flows through its carry — the lockstep decode's
+    garbage updates to the mid-prefill slot's cache rows are overwritten by
+    ``insert_direct`` at the transition."""
+    def prep(p, b):
+        x = model.embed_prompt(p, b)
+        chunks = tuple(jnp.split(x, x.shape[1] // chunk, axis=1))
+        return chunks, model.init_chunk_carry(p, b, cache_len)
+
+    chunk_only = jax.jit(
+        lambda p, c, carry, xc, start, ln, cbt: model.prefill_chunk(
+            p, c, carry, xc, start, ln, cbt, use_kernel=use_kernel))
+    if paged:
+        def fused(p, c, toks, pos, dbt, carry, xc, start, ln, cbt):
+            d_logits, c = model.decode_step_paged(p, c, toks, pos, dbt,
+                                                  use_kernel=use_kernel)
+            c_logits, carry, c = model.prefill_chunk(
+                p, c, carry, xc, start, ln, cbt, use_kernel=use_kernel)
+            return d_logits, c_logits, carry, c
+    else:
+        def fused(p, c, toks, pos, carry, xc, start, ln, cbt):
+            d_logits, c = model.decode_step(p, c, toks, pos,
+                                            use_kernel=use_kernel)
+            c_logits, carry, c = model.prefill_chunk(
+                p, c, carry, xc, start, ln, cbt, use_kernel=use_kernel)
+            return d_logits, c_logits, carry, c
+    return jax.jit(prep), jax.jit(fused), chunk_only
 
 
 def make_serve_fns(model: Model, cache_len: int, *, use_kernel: bool = False,
@@ -371,15 +625,23 @@ class SlotServer(_SlotTable):
     ``page_block > 0`` switches the attention KV leaves to the paged cache:
     ``pool_blocks`` physical blocks of ``page_block`` positions shared by
     all slots (0 → sized for full capacity, i.e. no admission blocking).
+
+    ``chunk > 0`` switches admission to chunked prefill: the prompt is
+    consumed ``chunk`` positions at a time, written straight into the paged
+    pool, and each chunk rides the same jitted dispatch as the lockstep
+    decode — no more stop-the-world prefill. ``token_budget`` bounds the
+    per-step token work (decoding slots + chunk).
     """
 
     def __init__(self, model: Model, params, n_slots: int, cache_len: int,
                  *, use_kernel: bool = False, serve_fns=None,
-                 page_block: int = 0, pool_blocks: int = 0):
+                 page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
+                 token_budget: int = 0, chunk_fns=None):
         page_block = effective_page_block(model, page_block)
         super().__init__(n_slots, cache_len, block_size=page_block,
                          n_blocks=pool_blocks,
-                         window=model.cfg.sliding_window)
+                         window=model.cfg.sliding_window, chunk=chunk,
+                         token_budget=token_budget)
         self.model, self.params = model, params
         self.use_kernel = use_kernel
         if self.paged:
@@ -391,15 +653,27 @@ class SlotServer(_SlotTable):
             self.spec = model.cache_spec()
         self._prefill, self._decode = serve_fns or make_serve_fns(
             model, cache_len, use_kernel=use_kernel, paged=self.paged)
+        if self.chunked:
+            _validate_chunked(model, self.paged, chunk)
+            self._prep, self._fused, self._chunk_only = \
+                chunk_fns or make_chunk_fns(model, cache_len, chunk,
+                                            use_kernel=use_kernel,
+                                            paged=self.paged)
 
     def admit(self, req: Request) -> bool:
-        """Prefill the request alone and insert its decode state at a free
-        slot. False when no slot — or, paged, not enough free blocks."""
+        """Admit a request into a free slot. Monolithic: prefill it alone
+        and insert its decode state. Chunked: embed the prompt, reserve its
+        blocks, and park the slot mid-prefill — the step loop consumes the
+        prompt chunk by chunk. False when no slot — or, paged, not enough
+        free blocks."""
         free = self.free_slots()
         if not free:
             return False
         slot = free[0]
         width = self._prefill_width(req)
+        if self.chunked:
+            return self._admit_chunked(
+                req, slot, width, lambda b: self._prep(self.params, b))
         if not self._admission_precheck(req, slot, width):
             return False
         logits, row_cache = self._prefill(self.params, req.batch())
@@ -414,15 +688,44 @@ class SlotServer(_SlotTable):
         return True
 
     def step(self) -> List[Request]:
-        """One lockstep decode over every active slot. Returns requests
-        retired this step."""
-        if not self.active:
+        """One scheduler step. Monolithic: lockstep decode over every
+        active slot. Chunked: co-schedule the lockstep decode with one
+        prefill chunk under the token budget, in a single jitted dispatch.
+        Returns requests retired this step."""
+        dec = self.decoding
+        do_chunk = self.chunked and self._schedule_chunk()
+        if not dec and not do_chunk:
             return []
+        if do_chunk:
+            slot, xc, start, length, cbt = self._chunk_args()
+            if not dec:
+                c_out, carry, self.cache = self._chunk_only(
+                    self.params, self.cache, self.prefill_carry[slot], xc,
+                    start, length, cbt)
+                self.prefill_carry[slot] = carry
+                return self._after_chunk(slot, length, c_out)
+            self._grow_active()
+            if self.paged:
+                d_logits, c_out, carry, self.cache = self._fused(
+                    self.params, self.cache, jnp.asarray(self.last_tok),
+                    jnp.asarray(self.pos),
+                    jnp.asarray(self._decode_tables()),
+                    self.prefill_carry[slot], xc, start, length, cbt)
+            else:
+                d_logits, c_out, carry, self.cache = self._fused(
+                    self.params, self.cache, jnp.asarray(self.last_tok),
+                    jnp.asarray(self.pos), self.prefill_carry[slot], xc,
+                    start, length, cbt)
+            self.prefill_carry[slot] = carry
+            nxt = np.asarray(jnp.argmax(d_logits, axis=-1), dtype=np.int32)
+            retired = self._advance(nxt)
+            retired += self._after_chunk(slot, length, c_out)
+            return retired
         if self.paged:
             self._grow_active()
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.last_tok),
-                jnp.asarray(self.pos), jnp.asarray(self.block_tables))
+                jnp.asarray(self.pos), jnp.asarray(self._decode_tables()))
         else:
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.last_tok),
@@ -440,17 +743,42 @@ class MixtureSlotServer(_SlotTable):
 
     def __init__(self, model: Model, expert_params: List[Any], router,
                  n_slots: int, cache_len: int, *, use_kernel: bool = False,
-                 page_block: int = 0, pool_blocks: int = 0):
+                 page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
+                 token_budget: int = 0):
         page_block = effective_page_block(model, page_block)
         super().__init__(n_slots, cache_len, block_size=page_block,
                          n_blocks=pool_blocks,
-                         window=model.cfg.sliding_window)
+                         window=model.cfg.sliding_window, chunk=chunk,
+                         token_budget=token_budget)
         self.model, self.router = model, router
         self.K = len(expert_params)
         self.use_kernel = use_kernel
-        self.stacked, _, self._prefill_all, self._mix_decode = \
+        self.stacked, param_axes, self._prefill_all, self._mix_decode = \
             make_stacked_serving(model, expert_params, cache_len,
                                  use_kernel=use_kernel, paged=self.paged)
+        if self.chunked:
+            _validate_chunked(model, self.paged, chunk)
+            self._prep_all, chunk_all = \
+                make_stacked_chunk_fns(model, self.stacked, param_axes,
+                                       cache_len, chunk,
+                                       use_kernel=use_kernel)
+            mix_decode = self._mix_decode
+            if self.paged:
+                def fused(sp, c, toks, pos, w, dbt, carry, xc, start, ln,
+                          cbt, w_row):
+                    probs, c = mix_decode(sp, c, toks, pos, w, dbt)
+                    c_probs, carry, c = chunk_all(sp, c, carry, xc, start,
+                                                  ln, cbt, w_row)
+                    return probs, c_probs, carry, c
+            else:
+                def fused(sp, c, toks, pos, w, carry, xc, start, ln, cbt,
+                          w_row):
+                    probs, c = mix_decode(sp, c, toks, pos, w)
+                    c_probs, carry, c = chunk_all(sp, c, carry, xc, start,
+                                                  ln, cbt, w_row)
+                    return probs, c_probs, carry, c
+            self._fused_mix = jax.jit(fused)
+            self._chunk_only_mix = jax.jit(chunk_all)
         # expert (K) dim at axis 1, AFTER each leaf's scan dim — the layout
         # the vmapped scanned decode consumes without per-step transposes
         shapes = model.paged_cache_shapes(
@@ -472,8 +800,18 @@ class MixtureSlotServer(_SlotTable):
             raise ValueError("mixture admission routes on request features")
         slot = free[0]
         width = self._prefill_width(req)
+        if self.chunked:
+            if not self._admit_chunked(
+                    req, slot, width,
+                    lambda b: self._prep_all(self.stacked, b)):
+                return False
+            w = self.router.route(jnp.asarray(req.features[None]))
+            self.weights[slot] = np.asarray(w[0])
+            return True
         if not self._admission_precheck(req, slot, width):
             return False
+        # route only once admission is paying for the prefill — a request
+        # blocked on free KV blocks must not re-run the router every retry
         w = self.router.route(jnp.asarray(req.features[None]))    # (1, K)
         logits, row_cache = self._prefill_all(self.stacked, req.batch())
         probs = self._mix(logits[:, :, -1], w)                    # (1, V)
@@ -487,14 +825,42 @@ class MixtureSlotServer(_SlotTable):
         return True
 
     def step(self) -> List[Request]:
-        if not self.active:
+        dec = self.decoding
+        do_chunk = self.chunked and self._schedule_chunk()
+        if not dec and not do_chunk:
             return []
+        if do_chunk:
+            slot, xc, start, length, cbt = self._chunk_args()
+            w_row = jnp.asarray(self.weights[slot:slot + 1])
+            if not dec:
+                c_out, carry, self.cache = self._chunk_only_mix(
+                    self.stacked, self.cache, self.prefill_carry[slot], xc,
+                    start, length, cbt, w_row)
+                self.prefill_carry[slot] = carry
+                return self._after_chunk(slot, length, c_out)
+            self._grow_active()
+            if self.paged:
+                probs, c_out, carry, self.cache = self._fused_mix(
+                    self.stacked, self.cache, jnp.asarray(self.last_tok),
+                    jnp.asarray(self.pos), jnp.asarray(self.weights),
+                    jnp.asarray(self._decode_tables()),
+                    self.prefill_carry[slot], xc, start, length, cbt, w_row)
+            else:
+                probs, c_out, carry, self.cache = self._fused_mix(
+                    self.stacked, self.cache, jnp.asarray(self.last_tok),
+                    jnp.asarray(self.pos), jnp.asarray(self.weights),
+                    self.prefill_carry[slot], xc, start, length, cbt, w_row)
+            self.prefill_carry[slot] = carry
+            retired = self._advance(
+                np.asarray(jnp.argmax(probs, axis=-1), dtype=np.int32))
+            retired += self._after_chunk(slot, length, c_out)
+            return retired
         if self.paged:
             self._grow_active()
             probs, self.cache = self._mix_decode(
                 self.stacked, self.cache, jnp.asarray(self.last_tok),
                 jnp.asarray(self.pos), jnp.asarray(self.weights),
-                jnp.asarray(self.block_tables))
+                jnp.asarray(self._decode_tables()))
         else:
             probs, self.cache = self._mix_decode(
                 self.stacked, self.cache, jnp.asarray(self.last_tok),
@@ -518,7 +884,8 @@ class DecentralizedSlotServer:
     def __init__(self, model: Model, expert_params: List[Any], router,
                  n_slots: int, cache_len: int, *, strategy: str = "top1",
                  use_kernel: bool = False, page_block: int = 0,
-                 pool_blocks: int = 0):
+                 pool_blocks: int = 0, chunk: int = 0,
+                 token_budget: int = 0):
         assert strategy in ("top1", "mixture"), strategy
         self.model, self.router = model, router
         self.K = len(expert_params)
@@ -527,17 +894,25 @@ class DecentralizedSlotServer:
         if strategy == "top1":
             fns = make_serve_fns(model, cache_len, use_kernel=use_kernel,
                                  paged=page_block > 0)
+            cfns = make_chunk_fns(model, cache_len, chunk,
+                                  use_kernel=use_kernel,
+                                  paged=page_block > 0) if chunk > 0 \
+                else None
             self.pods = [SlotServer(model, p, n_slots, cache_len,
                                     use_kernel=use_kernel, serve_fns=fns,
                                     page_block=page_block,
-                                    pool_blocks=pool_blocks)
+                                    pool_blocks=pool_blocks, chunk=chunk,
+                                    token_budget=token_budget,
+                                    chunk_fns=cfns)
                          for p in expert_params]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,
                                           n_slots, cache_len,
                                           use_kernel=use_kernel,
                                           page_block=page_block,
-                                          pool_blocks=pool_blocks)
+                                          pool_blocks=pool_blocks,
+                                          chunk=chunk,
+                                          token_budget=token_budget)
 
     def route(self, queue: List[Request]) -> np.ndarray:
         feats = np.stack([r.features for r in queue])
@@ -573,9 +948,8 @@ class DecentralizedSlotServer:
                     finished[req.rid] = req.out
             if idle:
                 break
-        dropped = [r.rid for reqs in pending for r in reqs] + \
-            [r.rid for pod in self.pods for r in pod.slot_req
-             if r is not None]
+        dropped = [f"{r.rid} (queued)" for reqs in pending for r in reqs] + \
+            [d for pod in self.pods for d in pod._drop_details()]
         if dropped:
             _raise_dropped(dropped, len(finished), max_steps)
         return finished

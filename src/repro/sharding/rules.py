@@ -20,7 +20,7 @@ count does not divide the axis (e.g. llama3 kv=8 on model=16).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -152,6 +152,31 @@ def cache_pspec_tree(cache_shapes, rules, mesh: Mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, _cache_leaf_spec(s, rules, mesh)),
         cache_shapes)
+
+
+def chunk_carry_pspec_tree(carry_shapes, rules, mesh: Mesh):
+    """Shardings for a chunked-prefill carry (one request's direct-leaf
+    decode states plus (1,)-shaped pool placeholders). The carry's batch
+    extent is 1 — a single request mid-prefill — so nothing shards over the
+    kv-cache batch axes; kv-heads of 5-D cross-attention leaves still
+    follow ``model`` when divisible (they are full per-layer KV rows), and
+    everything else is replicated alongside the dispatch that consumes it.
+    The stacked-mixture carry additionally carries ``dexpert`` at axis 1 of
+    every leaf, exactly like the stacked cache — reuse
+    ``stacked_cache_pspec_tree`` semantics by mapping over this result."""
+    import jax
+
+    def one(shape_struct):
+        shape = shape_struct.shape
+        spec = [None] * len(shape)
+        if len(shape) == 5:                    # (L, 1, F, KV, dh) cross KV
+            kv = shape[-2]
+            heads_ax = rules["kv_cache_heads"]
+            if kv % mesh.shape[heads_ax] == 0 and kv > 1:
+                spec[-2] = heads_ax
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, carry_shapes)
 
 
 def paged_pool_pspec_tree(paged_cache_shapes, rules, mesh: Mesh, seq_axes):

@@ -9,17 +9,14 @@ never exchange gradients — collectives stay inside a pod by construction.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.model import Model
-from repro.models.params import tree_pspecs, tree_shardings
+from repro.models.params import tree_shardings
 from repro.optim.adamw import AdamWConfig, apply_updates, init_state
-from repro.sharding import rules as sharding_rules
 
 Array = jnp.ndarray
 
@@ -72,7 +69,7 @@ def stack_expert_states(states) -> Dict[str, Any]:
 
 
 def unstack_expert_states(stacked, K: int):
-    return [jax.tree.map(lambda l: l[k], stacked) for k in range(K)]
+    return [jax.tree.map(lambda a: a[k], stacked) for k in range(K)]
 
 
 def make_decentralized_train_step(model: Model, cfg: TrainConfig) -> Callable:

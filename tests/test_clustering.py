@@ -1,6 +1,5 @@
 """Balanced spherical k-means + centroid router (paper §5.1–5.2)."""
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 import jax.numpy as jnp

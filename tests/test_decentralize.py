@@ -7,8 +7,6 @@ from _hyp import given, settings, st
 import jax.numpy as jnp
 
 from repro.core.decentralize import (ClusterSplit, decomposition_residual,
-                                     expert_velocities,
-                                     global_velocity_from_experts,
                                      mix_expert_distributions, router_weights,
                                      topk_filter_renorm)
 from repro.core.dfm import enumerate_states, n_states

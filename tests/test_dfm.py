@@ -14,7 +14,7 @@ from repro.core.autoregressive import (ar_conditional_velocity,
                                        ar_marginal_velocity, ar_path,
                                        mask_state)
 from repro.core.dfm import (apply_sampling_rule, chain_marginals,
-                            continuity_residual, divergence, encode,
+                            continuity_residual, encode,
                             enumerate_states, is_one_sparse, n_states,
                             neighbor_table, velocity_is_valid)
 

@@ -3,7 +3,6 @@ machinery must conserve tokens and respect capacity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.configs.base import ModelConfig, MoEConfig

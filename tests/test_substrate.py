@@ -1,8 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, sharding rules,
 roofline HLO parsing."""
-import os
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
