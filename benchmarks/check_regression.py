@@ -8,7 +8,8 @@ classes:
   stable across machines (both sides of each ratio run back-to-back on the
   same box), so they get a tolerance band around the baseline AND a hard
   floor where the serving claim itself sets one (chunked decode throughput
-  under burst ≥ 1.3× monolithic).
+  under burst ≥ 1.3× monolithic; shared-prefix TTFT with the prefix cache
+  warm ≥ 1.3× the uncached path).
 * **invariants** — parity flags. Exact; any drift fails.
 * **informational** — absolute tok/s and TTFT seconds. Machine-dependent;
   recorded in the report (and the uploaded artifact) but never gated, so a
@@ -38,11 +39,20 @@ GATED = {
         "higher_is_better": False, "rel_tol": 0.0},   # layout fact: exact
     ("serve_chunked", "chunked_over_monolithic"): {
         "higher_is_better": True, "rel_tol": 0.35, "floor": 1.30},
+    # TTFT ratio of two small wall-clock means: noisier than the
+    # throughput ratios, so the band is wide enough that the 1.3x claim
+    # floor (not the committed machine's ~3.2x) is the binding bound
+    ("serve_prefix", "prefix_ttft_speedup"): {
+        "higher_is_better": True, "rel_tol": 0.60, "floor": 1.30},
 }
 
 INVARIANTS = [
     ("serve_paged", "parity"),
     ("serve_chunked", "parity"),
+    ("serve_prefix", "parity"),
+    # every shared-prefix token of the warm workload was served from the
+    # cache — zero re-prefilled tokens for fully cached prefixes
+    ("serve_prefix", "full_prefix_reuse"),
 ]
 
 INFORMATIONAL = [
@@ -51,6 +61,9 @@ INFORMATIONAL = [
     ("serve_chunked", "chunked_decode_tok_per_s"),
     ("serve_chunked", "monolithic_burst_ttft_s"),
     ("serve_chunked", "chunked_burst_ttft_s"),
+    ("serve_prefix", "uncached_ttft_s"),
+    ("serve_prefix", "cached_ttft_s"),
+    ("serve_prefix", "prefill_tokens_skipped"),
 ]
 
 

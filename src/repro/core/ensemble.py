@@ -166,12 +166,13 @@ def make_stacked_chunk_fns(model, stacked, param_axes, cache_len: int,
 
     Returns ``(prep_all, chunk_all)``:
 
-    * ``prep_all(stacked, batch)`` → (per-chunk tensors each (K, 1, C, D) —
-      every expert owns its embedding table, and pre-splitting at admission
-      keeps the chunk step dispatch-free — per-expert chunk carries with
-      the K dim at axis 1 of every leaf, the same slot the stacked cache
-      keeps it in, so ``CacheSpec.shifted(1).insert_direct`` splices the
-      finished carry without a transpose);
+    * ``prep_all(stacked, batch)`` → (embedded prompt (K, 1, W, D) — every
+      expert owns its embedding table; admission slices off any cached
+      prefix and pre-splits the suffix into per-chunk tensors, keeping the
+      chunk step dispatch-free — per-expert chunk carries with the K dim
+      at axis 1 of every leaf, the same slot the stacked cache keeps it
+      in, so ``CacheSpec.shifted(1).insert_direct`` splices the finished
+      carry without a transpose);
     * ``chunk_all(stacked, caches, carry, xc, start, length, block_table,
       weights)`` → (Eq. 27 mixed next-token probs (1, V) at the chunk's
       last valid position, new carry, new caches) — ONE vmapped
@@ -187,11 +188,10 @@ def make_stacked_chunk_fns(model, stacked, param_axes, cache_len: int,
     def prep_all(stacked_p, batch):
         x = jax.vmap(lambda p: model.embed_prompt(p, batch),
                      in_axes=(param_axes,))(stacked_p)     # (K, 1, W, D)
-        chunks = tuple(jnp.split(x, x.shape[2] // chunk, axis=2))
         carry = jax.vmap(
             lambda p: model.init_chunk_carry(p, batch, cache_len),
             in_axes=(param_axes,), out_axes=1)(stacked_p)
-        return chunks, carry
+        return x, carry
 
     def chunk_all(stacked_p, caches, carry, xc, start, length, block_table,
                   weights):

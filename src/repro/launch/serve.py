@@ -68,6 +68,20 @@ def main() -> None:
                     help="per-step token budget: decoding slots count 1 "
                          "each, the chunk counts --prefill-chunk "
                          "(0 → slots + chunk, co-scheduling always fits)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged pool: "
+                         "admissions sharing a cached prompt prefix map "
+                         "the shared KV blocks read-only and start "
+                         "chunked prefill at the first uncached position "
+                         "(needs --paged and --chunked-prefill; ssm/"
+                         "hybrid fall back to the uncached path)")
+    ap.add_argument("--slot-temperature", type=float, default=0.0,
+                    help="per-request sampling temperature for the slot "
+                         "engine (0 → greedy; sampling is seeded per "
+                         "request, deterministic given --seed)")
+    ap.add_argument("--slot-top-k", type=int, default=0,
+                    help="sample from the k highest-scoring tokens "
+                         "(slot engine, 0 → full vocabulary)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -101,7 +115,9 @@ def main() -> None:
     if args.engine == "slots":
         queue = [Request(rid=i, tokens=batch_np["tokens"][i],
                          max_new=args.new_tokens,
-                         features=batch_np["features"][i])
+                         features=batch_np["features"][i],
+                         temperature=args.slot_temperature,
+                         top_k=args.slot_top_k, seed=args.seed + i)
                  for i in range(args.requests)]
         server = DecentralizedSlotServer(
             model, experts, router, n_slots=args.slots, cache_len=cache_len,
@@ -109,7 +125,8 @@ def main() -> None:
             page_block=args.page_block if args.paged else 0,
             pool_blocks=args.pool_blocks,
             chunk=args.prefill_chunk if args.chunked_prefill else 0,
-            token_budget=args.token_budget)
+            token_budget=args.token_budget,
+            prefix_cache=args.prefix_cache)
         finished = server.serve(queue)
         out = np.stack([np.asarray(finished[i], dtype=np.int32)
                         for i in range(args.requests)])
@@ -147,6 +164,9 @@ def main() -> None:
         "paged": args.paged if args.engine == "slots" else None,
         "chunked_prefill": (args.chunked_prefill
                             if args.engine == "slots" else None),
+        "prefix_cache": (args.prefix_cache
+                         if args.engine == "slots" else None),
+        "pods": server.occupancy() if args.engine == "slots" else None,
         "use_kernel": args.use_kernel,
         "wall_s": round(dt, 2),
         "tok_per_s": round(args.requests * args.new_tokens / dt, 1),

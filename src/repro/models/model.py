@@ -433,6 +433,19 @@ class Model:
     def cache_shapes(self, batch: int, cache_len: int):
         return self._cache_struct(batch, cache_len, as_shape=True)
 
+    @property
+    def prefix_cacheable(self) -> bool:
+        """True when a prompt's pool-resident KV fully determines its
+        decode state, so the radix prefix cache may splice cached blocks
+        into a new request's block table and skip prefilling those
+        positions. Attention-only decode state qualifies (dense/moe/vlm;
+        audio's cross-attention KV is recomputed per request from the
+        frames, independent of decoder positions). Recurrent families
+        (ssm, hybrid) carry state that accumulates across EVERY prompt
+        position outside the pool — skipping a cached prefix would
+        silently corrupt it — so they take the direct (uncached) path."""
+        return self.cfg.family not in ("ssm", "hybrid")
+
     def cache_spec(self, block_size: int = 0) -> CacheSpec:
         """Batch-axis descriptor matching ``_cache_struct``'s layouts.
 

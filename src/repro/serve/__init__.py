@@ -1,8 +1,9 @@
 from .engine import ServeEngine, serve_step_fn
 from .ensemble_engine import DecentralizedServer
+from .prefix_cache import PrefixCache, block_keys
 from .scheduler import (DecentralizedSlotServer, MixtureSlotServer, Request,
                         SlotServer)
 
 __all__ = ["DecentralizedServer", "DecentralizedSlotServer",
-           "MixtureSlotServer", "Request", "ServeEngine", "SlotServer",
-           "serve_step_fn"]
+           "MixtureSlotServer", "PrefixCache", "Request", "ServeEngine",
+           "SlotServer", "block_keys", "serve_step_fn"]

@@ -74,9 +74,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ensemble import (make_stacked_chunk_fns, make_stacked_serving,
-                                 mix_expert_logits)
+from repro.core.ensemble import (PROB_FLOOR, make_stacked_chunk_fns,
+                                 make_stacked_serving, mix_expert_logits)
 from repro.models.model import Model
+from repro.serve.prefix_cache import PrefixCache, block_keys
 
 Array = jnp.ndarray
 
@@ -92,6 +93,10 @@ class Request:
     extras: Dict[str, np.ndarray] = field(default_factory=dict)
     #                             # unbatched modality inputs: "patches"
     #                             # (vlm), "frames" (audio)
+    temperature: float = 0.0      # 0 → greedy (the default: parity-exact)
+    top_k: int = 0                # sample from the k highest-scoring tokens
+    #                             # (0 → the full vocabulary)
+    seed: int = 0                 # per-request sampling stream
     out: List[int] = field(default_factory=list)
     truncated: bool = False       # retired at the context bound, not done
     t_first: float = 0.0          # perf_counter at the first emitted token
@@ -116,6 +121,34 @@ class Request:
         return b
 
 
+def _sample_tokens(scores, temps, top_ks, seeds, counts):
+    """Per-slot seeded sampling step (jitted once, batched over slots).
+
+    scores: (B, V) next-token logits (or log-probabilities — argmax and
+    categorical are both invariant to the difference up to the temperature
+    semantics documented on ``Request``); temps: (B,) float32, ≤ 0 rows
+    take the greedy argmax; top_ks: (B,) int32, 0 → full vocabulary;
+    seeds/counts: (B,) uint32/int32 — token ``counts[b]`` of request
+    ``seeds[b]`` draws from ``fold_in(PRNGKey(seed), count)``, so a
+    request's sampled continuation depends only on (seed, scores), never
+    on slot placement or co-scheduled traffic.
+    """
+    V = scores.shape[-1]
+    greedy = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    k = jnp.where(top_ks <= 0, V, jnp.minimum(top_ks, V))
+    srt = jnp.sort(scores, axis=-1)                      # ascending
+    thresh = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
+    masked = jnp.where(scores >= thresh, scores, -jnp.inf)
+    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+    keys = jax.vmap(lambda s, c: jax.random.fold_in(
+        jax.random.PRNGKey(s), c))(seeds, counts)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+
+sample_tokens = jax.jit(_sample_tokens)
+
+
 def _raise_dropped(dropped: List[str], n_finished: int,
                    max_steps: int) -> None:
     """Exhausting the drive loop with unfinished requests is never a silent
@@ -138,6 +171,11 @@ class BlockAllocator:
     lockstep decode writes land there (their block tables are zeroed), so
     the pool hands out blocks 1..n_blocks-1. ``alloc`` is all-or-nothing —
     a partially satisfiable request leaves the free list untouched.
+
+    ``free`` guards against out-of-range ids and double frees with clear
+    errors: once blocks are refcounted and shared (the prefix cache), a
+    bookkeeping slip would otherwise hand the same physical block to two
+    live requests and corrupt both silently.
     """
 
     def __init__(self, n_blocks: int):
@@ -146,6 +184,7 @@ class BlockAllocator:
                              f"scratch block), got {n_blocks}")
         self.n_blocks = n_blocks
         self._free = list(range(n_blocks - 1, 0, -1))   # pop() → low ids
+        self._free_set = set(self._free)
 
     @property
     def n_free(self) -> int:
@@ -154,12 +193,25 @@ class BlockAllocator:
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
 
     def free(self, blocks: List[int]) -> None:
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"double free within one call: {blocks}")
         for b in blocks:
-            assert 0 < b < self.n_blocks, b
+            if not 0 < b < self.n_blocks:
+                raise ValueError(
+                    f"freeing block {b} outside the pool range "
+                    f"1..{self.n_blocks - 1} (block 0 is the reserved "
+                    f"scratch block)")
+            if b in self._free_set:
+                raise ValueError(
+                    f"double free of block {b} — it is already on the free "
+                    f"list; block refcount bookkeeping is corrupt")
         self._free.extend(blocks)
+        self._free_set.update(blocks)
 
 
 class _SlotTable:
@@ -175,7 +227,7 @@ class _SlotTable:
 
     def __init__(self, n_slots: int, cache_len: int, *, block_size: int = 0,
                  n_blocks: int = 0, window: int = 0, chunk: int = 0,
-                 token_budget: int = 0):
+                 token_budget: int = 0, prefix_cache: bool = False):
         self.n_slots, self.cache_len = n_slots, cache_len
         self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -192,10 +244,14 @@ class _SlotTable:
             else n_slots + chunk
         self.prefilling = [False] * n_slots
         self.prefill_pos = np.zeros(n_slots, dtype=np.int32)
+        self.prefill_base = np.zeros(n_slots, dtype=np.int32)  # cached prefix
         self.prefill_width = np.zeros(n_slots, dtype=np.int32)
         self.prefill_x: List[Any] = [None] * n_slots   # per-chunk tensors
         self.prefill_carry: List[Any] = [None] * n_slots
+        self.prefill_keys: List[Any] = [None] * n_slots  # full-block keys
         self.prefill_order: List[int] = []      # FCFS over mid-prefill slots
+        self._seq_axis = 1         # sequence axis of the embedded prompt
+        self._from_probs = False   # mixture scores are probabilities
         self.block_size = block_size
         self.paged = block_size > 0
         if self.paged:
@@ -214,6 +270,15 @@ class _SlotTable:
             self.allocator = BlockAllocator(n_blocks)
             self.block_tables = np.zeros((n_slots, self.nb_slot), np.int32)
             self.n_alloc = np.zeros(n_slots, dtype=np.int32)
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if not (self.paged and self.chunked):
+                raise ValueError(
+                    "the prefix cache shares prompt KV through the paged "
+                    "pool and fills misses with chunked prefill — enable "
+                    "paging (page_block > 0) and chunked prefill "
+                    "(chunk > 0)")
+            self.prefix = PrefixCache(self.allocator, block_size)
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -285,17 +350,49 @@ class _SlotTable:
     # Paged-cache bookkeeping
     # ------------------------------------------------------------------
 
-    def _reserve(self, slot: int, upto: int) -> bool:
+    def _alloc_blocks(self, n: int) -> Optional[List[int]]:
+        """Pool allocation with prefix-cache pressure relief: when the free
+        list can't satisfy, evict LRU unreferenced cached blocks back to it
+        and retry — cached-but-idle prefixes never block admission."""
+        blocks = self.allocator.alloc(n)
+        if blocks is None and self.prefix is not None:
+            self.prefix.evict(n - self.allocator.n_free)
+            blocks = self.allocator.alloc(n)
+        return blocks
+
+    def _reserve(self, slot: int, upto: int,
+                 shared: Optional[List[int]] = None) -> bool:
         """Grow ``slot``'s block reservation to cover logical positions
         [0, upto). Ring (sliding-window) slots reserve their whole bounded
-        span at once. All-or-nothing; False when the pool can't satisfy."""
+        span at once. All-or-nothing; False when the pool can't satisfy.
+
+        ``shared`` (admission only, table empty) maps prefix-cache hit
+        blocks read-only into the table's leading entries; only the
+        remainder is allocated fresh. The matched run is PINNED (acquired)
+        before that allocation runs — ``_alloc_blocks`` relieves pool
+        pressure by evicting LRU refcount-0 blocks, which is exactly what
+        the matched run still is until it is pinned — and un-pinned again
+        if the allocation fails, so a failed admission retry leaves the
+        cache as it found it."""
         need = self.nb_slot if self.ring else \
             min(-(-upto // self.block_size), self.nb_slot)
         need = max(need, 1)
         have = int(self.n_alloc[slot])
         if need <= have:
             return True
-        blocks = self.allocator.alloc(need - have)
+        if shared:
+            assert have == 0, (slot, have)
+            self.prefix.acquire(shared)
+            blocks = self._alloc_blocks(need - len(shared))
+            if blocks is None:
+                for b in shared:
+                    self.prefix.release(b)
+                return False
+            self.block_tables[slot, :len(shared)] = shared
+            self.block_tables[slot, len(shared):need] = blocks
+            self.n_alloc[slot] = need
+            return True
+        blocks = self._alloc_blocks(need - have)
         if blocks is None:
             return False
         self.block_tables[slot, have:need] = blocks
@@ -323,7 +420,15 @@ class _SlotTable:
         if self.paged:
             n = int(self.n_alloc[slot])
             if n:
-                self.allocator.free(self.block_tables[slot, :n].tolist())
+                blocks = self.block_tables[slot, :n].tolist()
+                if self.prefix is not None:
+                    # cache-tracked blocks stay resident (shared or LRU-
+                    # evictable); only untracked ones return to the free
+                    # list here
+                    blocks = [b for b in blocks
+                              if not self.prefix.release(b)]
+                if blocks:
+                    self.allocator.free(blocks)
             self.block_tables[slot, :] = 0
             self.n_alloc[slot] = 0
 
@@ -377,38 +482,126 @@ class _SlotTable:
         self._release(slot)
 
     # ------------------------------------------------------------------
+    # Token selection: greedy fast path / per-request seeded sampling
+    # ------------------------------------------------------------------
+
+    def _pick_first(self, req: Request, row, *,
+                    from_probs: bool = False) -> int:
+        """First token from a prefill's last-position scores ((V,) row).
+        Greedy unless the request asked for sampling; token index 0 of the
+        request's seeded stream either way."""
+        if req.temperature <= 0:
+            return int(jnp.argmax(row))
+        if from_probs:
+            row = jnp.log(jnp.maximum(row, PROB_FLOOR))
+        return int(sample_tokens(
+            row[None], jnp.asarray([req.temperature], jnp.float32),
+            jnp.asarray([req.top_k], jnp.int32),
+            jnp.asarray([req.seed & 0xFFFFFFFF], jnp.uint32),
+            jnp.asarray([len(req.out)], jnp.int32))[0])
+
+    def _next_tokens(self, scores, *, from_probs: bool = False) -> np.ndarray:
+        """Next token per slot from the lockstep dispatch's (n_slots, V)
+        scores. All-greedy steps keep the plain argmax; any sampled slot
+        routes the whole step through the jitted seeded sampler (greedy
+        rows still take their argmax inside it)."""
+        dec = self.decoding
+        if all(self.slot_req[s].temperature <= 0 for s in dec):
+            return np.asarray(jnp.argmax(scores, axis=-1), dtype=np.int32)
+        if from_probs:
+            scores = jnp.log(jnp.maximum(scores, PROB_FLOOR))
+        temps = np.zeros(self.n_slots, np.float32)
+        top_ks = np.zeros(self.n_slots, np.int32)
+        seeds = np.zeros(self.n_slots, np.uint32)
+        counts = np.zeros(self.n_slots, np.int32)
+        for s in dec:
+            r = self.slot_req[s]
+            temps[s], top_ks[s] = r.temperature, r.top_k
+            # & wraps negative seeds into uint32 range (NumPy 2.x raises
+            # on out-of-bounds assignment instead of wrapping)
+            seeds[s], counts[s] = r.seed & 0xFFFFFFFF, len(r.out)
+        return np.asarray(sample_tokens(
+            scores, jnp.asarray(temps), jnp.asarray(top_ks),
+            jnp.asarray(seeds), jnp.asarray(counts)), dtype=np.int32)
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving stats: active slots, pool free blocks, prefix-cache hit
+        rate — the numbers the serve log and ``occupancy()`` surface."""
+        out: Dict[str, Any] = {"active": len(self.active)}
+        if self.paged:
+            out["pool_free_blocks"] = self.allocator.n_free
+            out["pool_blocks"] = self.allocator.n_blocks
+        if self.prefix is not None:
+            out.update(self.prefix.stats())
+        return out
+
+    # ------------------------------------------------------------------
     # Chunked prefill: admission, chunk scheduling, decode transition
     # ------------------------------------------------------------------
 
     def _admit_chunked(self, req: Request, slot: int, width: int,
                        prep) -> bool:
-        """Shared chunked admission: validate, reserve the prompt's blocks
-        (the WHOLE width up front, so a chunk can never strand mid-prompt
-        on an exhausted pool), embed + pre-split + build the carry via
-        ``prep(batch)``, and park the slot mid-prefill. False → pool can't
-        reserve right now; the request stays pending."""
+        """Shared chunked admission: validate, match the prompt against the
+        prefix cache (hit blocks are mapped read-only into the table and
+        their positions skipped), reserve the remaining blocks (the WHOLE
+        width up front, so a chunk can never strand mid-prompt on an
+        exhausted pool), embed the prompt + build the carry via
+        ``prep(batch)``, slice off the cached prefix, pre-split the suffix
+        into per-chunk tensors, and park the slot mid-prefill at the first
+        uncached position. False → pool can't reserve right now; the
+        request stays pending (the match re-runs on retry, so a prefix
+        evicted meanwhile is simply re-prefilled)."""
         self._reject_overlong(req, width)
-        if self.paged and not self._reserve(slot, width):
+        base, shared, keys = 0, [], None
+        if self.prefix is not None:
+            # memoized per request: a pool-blocked admission retries every
+            # step, and the keys (incl. the extras digest) are immutable
+            cached = getattr(req, "_prefix_keys", None)
+            if cached is None or cached[0] != self.block_size:
+                keys = block_keys(req.tokens, req.extras, self.block_size,
+                                  width // self.block_size,
+                                  n_prefix=width - len(req.tokens))
+                req._prefix_keys = (self.block_size, keys)
+            else:
+                keys = cached[1]
+            shared = self.prefix.match(keys, width)
+            base = len(shared) * self.block_size
+        if self.paged and not self._reserve(slot, width, shared=shared):
             return False
-        pad = -width % self.chunk
+        if self.prefix is not None:
+            self.prefix.record(width, base)
+        pad = -(width - base) % self.chunk
         b = req.batch(pad_to=len(req.tokens) + pad)
-        chunks, carry = prep(b)
-        self._occupy_prefilling(slot, req, width, chunks, carry)
+        x, carry = prep(b)
+        if base:
+            x = jax.lax.slice_in_dim(x, base, x.shape[self._seq_axis],
+                                     axis=self._seq_axis)
+        chunks = tuple(jnp.split(x, x.shape[self._seq_axis] // self.chunk,
+                                 axis=self._seq_axis))
+        self._occupy_prefilling(slot, req, width, chunks, carry,
+                                base=base, keys=keys)
         return True
 
     def _occupy_prefilling(self, slot: int, req: Request, width: int,
-                           x, carry) -> None:
-        """Hold a slot in the mid-prefill state: the embedded prompt (as a
-        tuple of per-chunk tensors) and the chunk carry are per-slot host
-        state, the slot's block table already covers the prompt, and its
-        decode-side rows stay inert (pos 0, table masked to scratch) until
-        the transition."""
+                           x, carry, *, base: int = 0, keys=None) -> None:
+        """Hold a slot in the mid-prefill state: the embedded prompt suffix
+        (as a tuple of per-chunk tensors) and the chunk carry are per-slot
+        host state, the slot's block table already covers the prompt
+        (leading entries may be shared cached blocks — the prefill starts
+        at ``base``, the first uncached position), and its decode-side rows
+        stay inert (pos 0, table masked to scratch) until the transition."""
         self.slot_req[slot] = req
         self.prefilling[slot] = True
-        self.prefill_pos[slot] = 0
+        self.prefill_pos[slot] = base
+        self.prefill_base[slot] = base
         self.prefill_width[slot] = width
         self.prefill_x[slot] = x
         self.prefill_carry[slot] = carry
+        self.prefill_keys[slot] = keys
         self.prefill_order.append(slot)
         self.pos[slot] = 0
         self.last_tok[slot] = 0
@@ -442,27 +635,38 @@ class _SlotTable:
         slot = self.prefill_order[0]
         start = int(self.prefill_pos[slot])
         length = min(self.chunk, int(self.prefill_width[slot]) - start)
-        xc = self.prefill_x[slot][start // self.chunk]
+        xc = self.prefill_x[slot][
+            (start - int(self.prefill_base[slot])) // self.chunk]
         cbt = jnp.asarray(self.block_tables[slot]) if self.paged \
             else jnp.zeros((1,), jnp.int32)
         return slot, xc, start, length, cbt
 
     def _after_chunk(self, slot: int, length: int, c_out) -> List[Request]:
         """Advance a slot's prefill by one chunk; on the final chunk take
-        the first greedy token from the chunk's last valid position, splice
-        the carry's direct-leaf state into the batched cache, and transition
-        the slot to decode (or retire, for context-filling prompts and
-        max_new == 1)."""
+        the first token from the chunk's last valid position (greedy, or
+        the request's seeded sample), register the prompt's full blocks
+        with the prefix cache, splice the carry's direct-leaf state into
+        the batched cache, and transition the slot to decode (or retire,
+        for context-filling prompts and max_new == 1)."""
         self.prefill_pos[slot] += length
         if int(self.prefill_pos[slot]) < int(self.prefill_width[slot]):
             return []
         req = self.slot_req[slot]
-        first = int(jnp.argmax(c_out[0]))
+        first = self._pick_first(req, c_out[0], from_probs=self._from_probs)
         width = int(self.prefill_width[slot])
         self.prefill_order.remove(slot)
         self.prefilling[slot] = False
         self.prefill_x[slot] = None
         carry, self.prefill_carry[slot] = self.prefill_carry[slot], None
+        if self.prefix is not None:
+            # the prompt's full blocks are now whole and immutable (decode
+            # writes land past the prompt): make them shareable — BEFORE
+            # any retirement below releases them to the LRU list
+            n_full = width // self.block_size
+            self.prefix.insert(self.prefill_keys[slot] or [],
+                               self.block_tables[slot, :n_full])
+        self.prefill_keys[slot] = None
+        self.prefill_base[slot] = 0
         if width >= self.cache_len:      # prompt fills the context bound
             req.out.append(first)
             req.t_first = req.t_first or time.perf_counter()
@@ -522,6 +726,9 @@ class _SlotTable:
             self._drop_details()
         if dropped:
             _raise_dropped(dropped, len(finished), max_steps)
+        if self.paged:
+            logger.info("serve: %d finished, stats %s", len(finished),
+                        self.stats())
         return finished
 
 
@@ -560,11 +767,12 @@ def make_chunk_fns(model: Model, cache_len: int, chunk: int, *,
                    use_kernel: bool = False, paged: bool = False):
     """The jitted chunked-prefill function family one SlotServer runs on
     (shared across the pods of a top-1 DecentralizedSlotServer, like
-    ``make_serve_fns``): admission prep (embed the padded prompt, pre-split
-    it into per-chunk tensors — so a chunk step issues NO eager slicing —
-    and build the carry, all in one dispatch), the FUSED step — decode
-    every decoding slot AND consume one prefill chunk in a single dispatch
-    — and the chunk-only step for a server with nothing decoding. ``prep``
+    ``make_serve_fns``): admission prep (embed the padded prompt and build
+    the carry in one dispatch — admission then slices off any cached
+    prefix and pre-splits the suffix into per-chunk tensors, so a chunk
+    STEP still issues no eager slicing), the FUSED step — decode every
+    decoding slot AND consume one prefill chunk in a single dispatch —
+    and the chunk-only step for a server with nothing decoding. ``prep``
     retraces once per distinct padded prompt width (widths are rounded to
     whole chunks, so the bucket count stays small).
 
@@ -576,9 +784,8 @@ def make_chunk_fns(model: Model, cache_len: int, chunk: int, *,
     garbage updates to the mid-prefill slot's cache rows are overwritten by
     ``insert_direct`` at the transition."""
     def prep(p, b):
-        x = model.embed_prompt(p, b)
-        chunks = tuple(jnp.split(x, x.shape[1] // chunk, axis=1))
-        return chunks, model.init_chunk_carry(p, b, cache_len)
+        x = model.embed_prompt(p, b)                    # (1, W, D)
+        return x, model.init_chunk_carry(p, b, cache_len)
 
     chunk_only = jax.jit(
         lambda p, c, carry, xc, start, ln, cbt: model.prefill_chunk(
@@ -631,17 +838,27 @@ class SlotServer(_SlotTable):
     pool, and each chunk rides the same jitted dispatch as the lockstep
     decode — no more stop-the-world prefill. ``token_budget`` bounds the
     per-step token work (decoding slots + chunk).
+
+    ``prefix_cache=True`` (needs paging + chunked prefill) makes the pool
+    blocks content-addressed and shareable: admissions whose prompts share
+    a cached prefix map the shared blocks read-only and start chunked
+    prefill at the first uncached position. Families whose decode state
+    accumulates outside the pool (ssm, hybrid — see
+    ``Model.prefix_cacheable``) degrade to the uncached path.
     """
 
     def __init__(self, model: Model, params, n_slots: int, cache_len: int,
                  *, use_kernel: bool = False, serve_fns=None,
                  page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
-                 token_budget: int = 0, chunk_fns=None):
+                 token_budget: int = 0, chunk_fns=None,
+                 prefix_cache: bool = False):
         page_block = effective_page_block(model, page_block)
         super().__init__(n_slots, cache_len, block_size=page_block,
                          n_blocks=pool_blocks,
                          window=model.cfg.sliding_window, chunk=chunk,
-                         token_budget=token_budget)
+                         token_budget=token_budget,
+                         prefix_cache=prefix_cache
+                         and model.prefix_cacheable)
         self.model, self.params = model, params
         self.use_kernel = use_kernel
         if self.paged:
@@ -677,8 +894,8 @@ class SlotServer(_SlotTable):
         if not self._admission_precheck(req, slot, width):
             return False
         logits, row_cache = self._prefill(self.params, req.batch())
-        # greedy first token from the prompt's last position
-        first = int(jnp.argmax(logits[0, -1]))
+        # first token from the prompt's last position (greedy / sampled)
+        first = self._pick_first(req, logits[0, -1])
         # logits width = positions consumed (incl. any image prefix)
         assert logits.shape[1] == width, (logits.shape, width)
         if width == self.cache_len:
@@ -717,7 +934,7 @@ class SlotServer(_SlotTable):
                     jnp.asarray(self.pos), self.prefill_carry[slot], xc,
                     start, length, cbt)
             self.prefill_carry[slot] = carry
-            nxt = np.asarray(jnp.argmax(d_logits, axis=-1), dtype=np.int32)
+            nxt = self._next_tokens(d_logits)
             retired = self._advance(nxt)
             retired += self._after_chunk(slot, length, c_out)
             return retired
@@ -730,8 +947,7 @@ class SlotServer(_SlotTable):
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.last_tok),
                 jnp.asarray(self.pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
-        return self._advance(nxt)
+        return self._advance(self._next_tokens(logits))
 
 
 class MixtureSlotServer(_SlotTable):
@@ -744,12 +960,16 @@ class MixtureSlotServer(_SlotTable):
     def __init__(self, model: Model, expert_params: List[Any], router,
                  n_slots: int, cache_len: int, *, use_kernel: bool = False,
                  page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
-                 token_budget: int = 0):
+                 token_budget: int = 0, prefix_cache: bool = False):
         page_block = effective_page_block(model, page_block)
         super().__init__(n_slots, cache_len, block_size=page_block,
                          n_blocks=pool_blocks,
                          window=model.cfg.sliding_window, chunk=chunk,
-                         token_budget=token_budget)
+                         token_budget=token_budget,
+                         prefix_cache=prefix_cache
+                         and model.prefix_cacheable)
+        self._seq_axis = 2      # embedded prompts carry K at axis 0
+        self._from_probs = True  # the mixed scores are Eq. 27 probabilities
         self.model, self.router = model, router
         self.K = len(expert_params)
         self.use_kernel = use_kernel
@@ -815,7 +1035,7 @@ class MixtureSlotServer(_SlotTable):
         w = self.router.route(jnp.asarray(req.features[None]))    # (1, K)
         logits, row_cache = self._prefill_all(self.stacked, req.batch())
         probs = self._mix(logits[:, :, -1], w)                    # (1, V)
-        first = int(jnp.argmax(probs[0]))
+        first = self._pick_first(req, probs[0], from_probs=True)
         assert logits.shape[2] == width, (logits.shape, width)
         if width == self.cache_len:
             self._retire_at_admission(req, first)
@@ -851,8 +1071,8 @@ class MixtureSlotServer(_SlotTable):
                     jnp.asarray(self.pos), jnp.asarray(self.weights),
                     self.prefill_carry[slot], xc, start, length, cbt, w_row)
             self.prefill_carry[slot] = carry
-            retired = self._advance(
-                np.asarray(jnp.argmax(probs, axis=-1), dtype=np.int32))
+            retired = self._advance(self._next_tokens(probs,
+                                                      from_probs=True))
             retired += self._after_chunk(slot, length, c_out)
             return retired
         if self.paged:
@@ -865,8 +1085,7 @@ class MixtureSlotServer(_SlotTable):
             probs, self.cache = self._mix_decode(
                 self.stacked, self.cache, jnp.asarray(self.last_tok),
                 jnp.asarray(self.pos), jnp.asarray(self.weights))
-        nxt = np.asarray(jnp.argmax(probs, axis=-1), dtype=np.int32)
-        return self._advance(nxt)
+        return self._advance(self._next_tokens(probs, from_probs=True))
 
 
 class DecentralizedSlotServer:
@@ -878,14 +1097,19 @@ class DecentralizedSlotServer:
     strategy="mixture" — general top-k: the stacked-expert mixture core.
 
     ``page_block > 0`` switches every pod (or the mixture core) to the
-    paged KV cache; ``pool_blocks`` is per pod.
+    paged KV cache; ``pool_blocks`` is per pod. ``prefix_cache=True``
+    gives every pod its own radix prefix cache (the mixture core shares
+    one across all K stacked experts — the pool carries the ``dexpert``
+    dim, so a shared prefix block is shared for all K at once); the
+    per-expert routing concentrates similar requests on the same pods,
+    which is exactly what makes the per-pod caches hit.
     """
 
     def __init__(self, model: Model, expert_params: List[Any], router,
                  n_slots: int, cache_len: int, *, strategy: str = "top1",
                  use_kernel: bool = False, page_block: int = 0,
                  pool_blocks: int = 0, chunk: int = 0,
-                 token_budget: int = 0):
+                 token_budget: int = 0, prefix_cache: bool = False):
         assert strategy in ("top1", "mixture"), strategy
         self.model, self.router = model, router
         self.K = len(expert_params)
@@ -903,7 +1127,8 @@ class DecentralizedSlotServer:
                                     page_block=page_block,
                                     pool_blocks=pool_blocks, chunk=chunk,
                                     token_budget=token_budget,
-                                    chunk_fns=cfns)
+                                    chunk_fns=cfns,
+                                    prefix_cache=prefix_cache)
                          for p in expert_params]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,
@@ -912,7 +1137,8 @@ class DecentralizedSlotServer:
                                           page_block=page_block,
                                           pool_blocks=pool_blocks,
                                           chunk=chunk,
-                                          token_budget=token_budget)
+                                          token_budget=token_budget,
+                                          prefix_cache=prefix_cache)
 
     def route(self, queue: List[Request]) -> np.ndarray:
         feats = np.stack([r.features for r in queue])
@@ -954,8 +1180,11 @@ class DecentralizedSlotServer:
             _raise_dropped(dropped, len(finished), max_steps)
         return finished
 
-    def occupancy(self) -> List[int]:
-        """Active slots per pod (top-1) or in the mixture core."""
-        if self.strategy == "mixture":
-            return [len(self.core.active)]
-        return [len(p.active) for p in self.pods]
+    def occupancy(self) -> List[Dict[str, Any]]:
+        """Per-pod serving stats (one dict per top-1 pod, or one for the
+        mixture core): ``active`` slots, and — when paged —
+        ``pool_free_blocks`` / ``pool_blocks``, plus the prefix-cache
+        counters (``prefix_hit_rate``, ``prefix_skipped_tokens``, …) when
+        the cache is on."""
+        pods = [self.core] if self.strategy == "mixture" else self.pods
+        return [p.stats() for p in pods]

@@ -179,6 +179,21 @@ def chunk_carry_pspec_tree(carry_shapes, rules, mesh: Mesh):
     return jax.tree.map(one, carry_shapes)
 
 
+def block_table_pspec(rules, mesh: Mesh) -> NamedSharding:
+    """Placement for the paged-cache METADATA operands: the per-step
+    (n_slots, NB) decode block tables and the single-request (NB,) chunk
+    table. The radix prefix-cache tree, refcounts, and LRU list are host
+    state and never reach a device; the block table is the one
+    device-visible piece of metadata, and it must be REPLICATED — with the
+    pool's *physical block* axis sharded over the kv-cache batch axes
+    (``paged_pool_pspec_tree``), every shard resolves its own
+    ``pool[table]`` gather locally, so the tiny int32 table rides along
+    with each dispatch instead of being scattered (and a shared-prefix
+    block is readable from every shard that holds it, whichever slot's
+    table points at it)."""
+    return NamedSharding(mesh, P())
+
+
 def paged_pool_pspec_tree(paged_cache_shapes, rules, mesh: Mesh, seq_axes):
     """Shardings for the PAGED decode cache. ``seq_axes`` is the
     ``CacheSpec.paged.seq_axes`` pytree: leaves marked ``-1`` are direct

@@ -122,6 +122,39 @@ def test_slot_reuse_and_occupancy():
     assert len(out) == 7
     assert all(len(v) == 3 for v in out.values())
     assert server.active == []            # all slots freed
+    assert server.stats() == {"active": 0}   # contiguous: no pool counters
+
+
+def test_stats_report_pool_and_prefix_counters():
+    """stats() (the payload of DecentralizedSlotServer.occupancy() and the
+    serve-completion log) reports the pool free-block count and — with the
+    prefix cache on — its hit-rate counters."""
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(8)
+    shared = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.integers(0, cfg.vocab, size=4).astype(np.int32)])
+        for _ in range(3)]
+
+    paged = SlotServer(model, params, n_slots=2, cache_len=32, page_block=8)
+    paged.serve([Request(i, p, 3) for i, p in enumerate(prompts)])
+    st = paged.stats()
+    assert st["active"] == 0 and "prefix_hit_rate" not in st
+    assert st["pool_free_blocks"] == st["pool_blocks"] - 1  # all returned
+
+    srv = SlotServer(model, params, n_slots=1, cache_len=32, page_block=8,
+                     chunk=8, prefix_cache=True)
+    srv.serve([Request(i, p, 3) for i, p in enumerate(prompts)])
+    st = srv.stats()
+    assert st["prefix_lookups"] == 3
+    # requests 1 and 2 each skipped the two full shared blocks
+    assert st["prefix_skipped_tokens"] == 2 * 16
+    assert st["prefix_hit_rate"] == pytest.approx(32 / 60, abs=1e-4)
+    assert st["prefix_cached_blocks"] == st["prefix_evictable_blocks"] > 0
+    assert st["pool_free_blocks"] == \
+        st["pool_blocks"] - 1 - st["prefix_cached_blocks"]
 
 
 def test_slot_server_use_kernel_parity():
