@@ -53,6 +53,8 @@ INVARIANTS = [
     # every shared-prefix token of the warm workload was served from the
     # cache — zero re-prefilled tokens for fully cached prefixes
     ("serve_prefix", "full_prefix_reuse"),
+    # the streaming add_request/step API reproduces the serve() drain loop
+    ("serve_stream", "parity"),
 ]
 
 INFORMATIONAL = [
@@ -64,6 +66,12 @@ INFORMATIONAL = [
     ("serve_prefix", "uncached_ttft_s"),
     ("serve_prefix", "cached_ttft_s"),
     ("serve_prefix", "prefill_tokens_skipped"),
+    # per-token latency through the streaming API (machine-dependent —
+    # recorded, never gated; absent from baselines that predate them)
+    ("serve_stream", "itl_p50_ms"),
+    ("serve_stream", "itl_p99_ms"),
+    ("serve_stream", "ttft_mean_s"),
+    ("serve_stream", "stream_tok_per_s"),
 ]
 
 
@@ -96,7 +104,7 @@ def check(result: dict, baseline: dict) -> int:
             failures.append(f"{sec}.{key}: expected true, got {got}")
     for sec, key in INFORMATIONAL:
         got = result[sec][key]
-        base = baseline[sec].get(key, float("nan"))
+        base = baseline.get(sec, {}).get(key, float("nan"))
         print(f"{sec + '.' + key:52s} {got:10.3f} {base:10.3f}  info")
     if failures:
         print(f"\nFAIL: {len(failures)} regression(s):")

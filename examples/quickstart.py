@@ -23,6 +23,7 @@ from repro.data.synthetic import SyntheticConfig, SyntheticMultimodal
 from repro.configs.base import get_smoke_config
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig
+from repro.serve.api import SamplingParams
 from repro.serve.ensemble_engine import DecentralizedServer
 from repro.train.trainer import (TrainConfig, init_train_state,
                                  train_host_loop)
@@ -89,7 +90,11 @@ def step2_to_4():
         logp[:, :-1], batch["labels"][:, 1:, None], -1).mean())
     print(f"  dense NLL    = {d_nll:.3f}")
     print(f"  ensemble NLL = {ens_nll:.3f}  (top-1 routed, compute-matched)")
-    toks = server.generate_top1(batch, 8, jax.random.PRNGKey(1))
+    # SamplingParams is the same object the slot engines consume — the
+    # seed derives the sampling key (temperature > 0 → stochastic)
+    toks = server.generate_top1(batch, SamplingParams(max_new=8,
+                                                      temperature=1.0,
+                                                      seed=1))
     print(f"  sample generation: {toks[0].tolist()}")
 
 

@@ -6,8 +6,15 @@ decodes with the top-1 expert (compute-matched, paper §5.2), and reports
 throughput + routing stats. Use --strategy mixture for the exact Eq. 27
 top-k probability mixture.
 
+The launcher drives the incremental serving API (``EngineConfig`` +
+``add_request``/``step``): pass ``--stream`` to watch every request's
+token deltas arrive as they decode, and ``--stop-token ID`` (repeatable)
+to retire requests early with ``finish_reason="stop"``.
+
     PYTHONPATH=src python examples/train_decentralized.py --steps 100
     PYTHONPATH=src python examples/serve_ensemble.py
+    PYTHONPATH=src python examples/serve_ensemble.py --stream \
+        --stop-token 7
 """
 import argparse
 import subprocess
@@ -20,11 +27,19 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--strategy", choices=["top1", "mixture"],
                     default="top1")
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-token deltas from the streaming API")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="stop/eos token id (repeatable)")
     args = ap.parse_args()
 
     cmd = [sys.executable, "-m", "repro.launch.serve",
            "--run", args.run, "--arch", args.arch,
            "--requests", str(args.requests), "--strategy", args.strategy,
            "--new-tokens", "24"]
+    if args.stream:
+        cmd.append("--stream")
+    for t in args.stop_token or ():
+        cmd += ["--stop-token", str(t)]
     print("running:", " ".join(cmd))
     raise SystemExit(subprocess.call(cmd))

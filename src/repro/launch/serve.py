@@ -12,6 +12,13 @@ wait for long ones. Reports routing fidelity and throughput.
     PYTHONPATH=src python -m repro.launch.serve --run /tmp/repro_run \
         --arch qwen3_8b --requests 16 --new-tokens 24 --slots 8
 
+Every serving flag lands in ONE ``EngineConfig`` (validated up front —
+bad flag combinations raise a single actionable error) and the engine is
+built by ``make_engine``. The drive loop speaks the incremental
+``add_request``/``step`` API; ``--stream`` prints each request's token
+deltas as they decode, ``--stop-token`` retires requests early with
+``finish_reason="stop"``.
+
 ``--engine batch`` falls back to the whole-batch ``DecentralizedServer``
 (lockstep generation, supports temperature sampling).
 """
@@ -21,7 +28,6 @@ import argparse
 import json
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,8 +36,9 @@ from repro.configs.base import ARCH_IDS, get_smoke_config
 from repro.core.router import CentroidRouter, RouterConfig
 from repro.data.synthetic import SyntheticConfig, SyntheticMultimodal
 from repro.models import build_model
+from repro.serve.api import EngineConfig, SamplingParams
 from repro.serve.ensemble_engine import DecentralizedServer
-from repro.serve.scheduler import DecentralizedSlotServer, Request
+from repro.serve.scheduler import make_engine
 
 
 def main() -> None:
@@ -82,6 +89,14 @@ def main() -> None:
     ap.add_argument("--slot-top-k", type=int, default=0,
                     help="sample from the k highest-scoring tokens "
                          "(slot engine, 0 → full vocabulary)")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="stop/eos token id (repeatable): a request retires "
+                         "with finish_reason='stop' as soon as it GENERATES "
+                         "one (slot engine)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the incremental add_request/step API and "
+                         "print per-token deltas as they decode "
+                         "(slot engine)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -113,23 +128,38 @@ def main() -> None:
 
     t0 = time.time()
     if args.engine == "slots":
-        queue = [Request(rid=i, tokens=batch_np["tokens"][i],
-                         max_new=args.new_tokens,
-                         features=batch_np["features"][i],
-                         temperature=args.slot_temperature,
-                         top_k=args.slot_top_k, seed=args.seed + i)
-                 for i in range(args.requests)]
-        server = DecentralizedSlotServer(
-            model, experts, router, n_slots=args.slots, cache_len=cache_len,
-            strategy=args.strategy, use_kernel=args.use_kernel,
-            page_block=args.page_block if args.paged else 0,
-            pool_blocks=args.pool_blocks,
-            chunk=args.prefill_chunk if args.chunked_prefill else 0,
-            token_budget=args.token_budget,
-            prefix_cache=args.prefix_cache)
-        finished = server.serve(queue)
-        out = np.stack([np.asarray(finished[i], dtype=np.int32)
-                        for i in range(args.requests)])
+        # every flag lands in ONE validated config — bad combinations
+        # raise a single actionable ValueError before any compilation
+        ecfg = EngineConfig(
+            n_slots=args.slots, cache_len=cache_len, paged=args.paged,
+            page_block=args.page_block, pool_blocks=args.pool_blocks,
+            chunked_prefill=args.chunked_prefill, chunk=args.prefill_chunk,
+            token_budget=args.token_budget, prefix_cache=args.prefix_cache,
+            use_kernel=args.use_kernel, strategy=args.strategy)
+        ecfg.validate(model)
+        server = make_engine(model, experts=experts, router=router,
+                             config=ecfg)
+
+        def sp(i: int) -> SamplingParams:
+            return SamplingParams(
+                max_new=args.new_tokens, temperature=args.slot_temperature,
+                top_k=args.slot_top_k, seed=args.seed + i,
+                stop_token_ids=tuple(args.stop_token or ()))
+
+        for i in range(args.requests):
+            server.add_request(batch_np["tokens"][i], sp(i), rid=i,
+                               features=batch_np["features"][i])
+        finished = {}
+        while server.has_unfinished():
+            for o in server.step():
+                if args.stream and o.deltas:
+                    tail = f"  [{o.finish_reason}]" if o.finished else ""
+                    print(f"rid={o.rid:3d} +"
+                          f"{[d.token for d in o.deltas]}{tail}")
+                if o.finished:
+                    finished[o.rid] = o.token_ids
+        out = {i: finished[i] for i in range(args.requests)}
+        n_tok = sum(len(v) for v in out.values())
     else:
         batch = {
             "tokens": jnp.asarray(batch_np["tokens"]),
@@ -141,9 +171,11 @@ def main() -> None:
                                      use_kernel=args.use_kernel)
         gen = (server.generate_top1 if args.strategy == "top1"
                else server.generate_mixture)
-        out = np.asarray(gen(batch, args.new_tokens,
-                             jax.random.PRNGKey(args.seed),
-                             args.temperature))
+        arr = np.asarray(gen(batch, SamplingParams(
+            max_new=args.new_tokens, temperature=args.temperature,
+            seed=args.seed)))
+        out = {i: arr[i].tolist() for i in range(args.requests)}
+        n_tok = args.requests * args.new_tokens
     dt = time.time() - t0
 
     per_expert = np.bincount(routed, minlength=len(experts))
@@ -168,15 +200,16 @@ def main() -> None:
                          if args.engine == "slots" else None),
         "pods": server.occupancy() if args.engine == "slots" else None,
         "use_kernel": args.use_kernel,
+        "stream": args.stream if args.engine == "slots" else None,
         "wall_s": round(dt, 2),
-        "tok_per_s": round(args.requests * args.new_tokens / dt, 1),
+        "tok_per_s": round(n_tok / dt, 1),
         "requests_per_expert": per_expert.tolist(),
         "router_latent_alignment": float(aligned),
     }, indent=1))
     for i in range(min(4, args.requests)):
         print(f"req {i} → expert {routed[i]}: "
               f"prompt={batch_np['tokens'][i, :8].tolist()}… "
-              f"gen={out[i, :12].tolist()}…")
+              f"gen={list(out[i])[:12]}…")
 
 
 if __name__ == "__main__":

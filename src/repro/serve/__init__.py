@@ -1,9 +1,12 @@
+from .api import (EngineConfig, RequestOutput, SamplingParams, TokenDelta,
+                  FINISH_REASONS)
 from .engine import ServeEngine, serve_step_fn
 from .ensemble_engine import DecentralizedServer
 from .prefix_cache import PrefixCache, block_keys
 from .scheduler import (DecentralizedSlotServer, MixtureSlotServer, Request,
-                        SlotServer)
+                        SlotServer, make_engine)
 
-__all__ = ["DecentralizedServer", "DecentralizedSlotServer",
-           "MixtureSlotServer", "PrefixCache", "Request", "ServeEngine",
-           "SlotServer", "block_keys", "serve_step_fn"]
+__all__ = ["DecentralizedServer", "DecentralizedSlotServer", "EngineConfig",
+           "FINISH_REASONS", "MixtureSlotServer", "PrefixCache", "Request",
+           "RequestOutput", "SamplingParams", "ServeEngine", "SlotServer",
+           "TokenDelta", "block_keys", "make_engine", "serve_step_fn"]

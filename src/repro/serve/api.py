@@ -1,0 +1,243 @@
+"""The online serving API: the typed objects every engine speaks.
+
+After PRs 1–4 the serving stack could page, chunk, and share KV — but the
+public surface was still batch-drain only: ``serve(queue)`` consumed a
+pre-built list of ``Request``s to completion, callers saw tokens only at
+retirement, and every feature rode in as another constructor kwarg
+validated ad hoc. This module is the stable client-facing contract the
+schedulers now implement:
+
+* ``SamplingParams`` — per-request decoding controls (budget, temperature,
+  top-k, seed, stop/eos token ids). Replaces the ad-hoc fields scattered
+  on ``Request``.
+* ``EngineConfig`` — per-engine deployment knobs (slots, context, paging,
+  chunked prefill, prefix cache, kernels) with ONE ``validate()`` that
+  owns the whole feature-dependency matrix and raises actionable errors
+  naming the missing prerequisite.
+* ``TokenDelta`` / ``RequestOutput`` — what ``step()`` streams back: the
+  tokens newly decoded for a request this step (each stamped for TTFT /
+  inter-token-latency measurement), the cumulative output ids, and — once
+  finished — a ``finish_reason`` in {``length``, ``stop``, ``aborted``,
+  ``truncated``}.
+
+The engines themselves (``SlotServer``, ``MixtureSlotServer``,
+``DecentralizedSlotServer`` and the ``make_engine`` factory) live in
+``repro.serve.scheduler``; they expose the incremental request-lifecycle
+primitives
+
+    rid = engine.add_request(prompt, SamplingParams(...), features=...)
+    for out in engine.step(): ...      # per-token deltas, not retirements
+    engine.abort(rid)                  # frees slot/blocks/prefix refs
+    engine.has_unfinished()
+
+and the legacy ``serve(queue)`` is a thin drain loop over exactly these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import FrozenSet, List, Optional, Tuple
+
+import jax
+
+__all__ = ["EngineConfig", "RequestOutput", "SamplingParams", "TokenDelta",
+           "FINISH_REASONS", "effective_page_block"]
+
+#: The closed set of reasons a request can finish with.
+#:   length    — decoded its full ``max_new`` budget
+#:   stop      — emitted a stop/eos token id before the budget
+#:   aborted   — ``abort(rid)`` cancelled it (queued, mid-prefill or
+#:               mid-decode)
+#:   truncated — hit the serving context bound ``cache_len`` first
+FINISH_REASONS = ("length", "stop", "aborted", "truncated")
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    ``temperature <= 0`` is greedy decoding (the parity-exact default);
+    otherwise sampling is seeded per request — token ``i`` draws from
+    ``fold_in(PRNGKey(seed), i)``, so a request's continuation depends
+    only on (seed, scores), never on slot placement or co-scheduled
+    traffic. ``top_k == 0`` samples the full vocabulary; ``top_k == 1``
+    is exactly greedy.
+
+    ``stop_token_ids`` (plus the conventional ``eos_token_id``, folded
+    into the same set) retire the request as soon as one is *generated*
+    (prompt tokens never trigger), with ``finish_reason == "stop"``. The
+    stop token itself is kept in the output.
+    """
+
+    max_new: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    stop_token_ids: Tuple[int, ...] = ()
+    eos_token_id: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_new < 1:
+            raise ValueError(
+                f"max_new must be >= 1 (every request emits at least its "
+                f"prefill token), got {self.max_new}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = full vocabulary), "
+                             f"got {self.top_k}")
+        stops = frozenset(int(t) for t in self.stop_token_ids)
+        if self.eos_token_id is not None:
+            stops |= {int(self.eos_token_id)}
+        object.__setattr__(self, "stop_set", stops)
+
+    stop_set: FrozenSet[int] = field(init=False, repr=False, compare=False,
+                                     default=frozenset())
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Engine deployment knobs + the ONE place their dependency matrix is
+    enforced.
+
+    ``validate()`` replaces the checks that used to be scattered across
+    ``_SlotTable.__init__``, ``_validate_chunked`` and the launcher: a bad
+    combination raises a single ``ValueError`` that names the missing
+    prerequisite. The config-only rules always run; passing the model runs
+    the model-dependent ones too (cache-family paging, recurrent chunk
+    alignment, sliding windows).
+    """
+
+    n_slots: int = 8
+    cache_len: int = 128
+    # -- paged KV cache (PR 2)
+    paged: bool = False
+    page_block: int = 16
+    pool_blocks: int = 0          # 0 → full capacity (never admission-blocks)
+    # -- chunked-prefill continuous batching (PR 3)
+    chunked_prefill: bool = False
+    chunk: int = 16
+    token_budget: int = 0         # 0 → n_slots + chunk (always co-schedules)
+    # -- radix prefix cache (PR 4)
+    prefix_cache: bool = False
+    # -- misc
+    use_kernel: bool = False
+    strategy: str = "top1"        # decentralized engines: "top1" | "mixture"
+
+    def validate(self, model=None) -> None:
+        """Raise ``ValueError`` on an inconsistent configuration. Pass the
+        model to additionally run the model-dependent checks (they need
+        the cache descriptor / architecture config)."""
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.cache_len < 2:
+            raise ValueError(
+                f"cache_len must be >= 2 (one prompt position plus one "
+                f"decodable position), got {self.cache_len}")
+        if self.paged and self.page_block < 1:
+            raise ValueError(
+                f"paged serving needs page_block >= 1 positions per KV "
+                f"block, got {self.page_block}")
+        if self.pool_blocks and not self.paged:
+            raise ValueError(
+                "pool_blocks sizes the paged block pool — it needs "
+                "paged=True (page_block > 0)")
+        if self.paged and self.pool_blocks == 1:
+            raise ValueError(
+                "pool_blocks=1 is only the reserved scratch block — a "
+                "paged pool needs >= 2 blocks (or 0 for full capacity)")
+        if self.chunked_prefill and self.chunk < 1:
+            raise ValueError(
+                f"chunked prefill needs chunk >= 1 prompt positions per "
+                f"step, got {self.chunk}")
+        if self.token_budget < 0:
+            raise ValueError(
+                f"token_budget must be >= 0, got {self.token_budget}")
+        if self.token_budget and not self.chunked_prefill:
+            raise ValueError(
+                "token_budget bounds the chunked-prefill step loop — it "
+                "needs chunked_prefill=True (chunk > 0)")
+        if self.prefix_cache and not (self.paged and self.chunked_prefill):
+            raise ValueError(
+                "the prefix cache shares prompt KV through the paged pool "
+                "and fills misses with chunked prefill — enable paging "
+                "(page_block > 0) and chunked prefill (chunk > 0)")
+        if self.strategy not in ("top1", "mixture"):
+            raise ValueError(
+                f"strategy must be 'top1' or 'mixture', got "
+                f"{self.strategy!r}")
+        if model is not None:
+            self._validate_model(model)
+
+    def _validate_model(self, model) -> None:
+        cfg = model.cfg
+        eff_block = effective_page_block(
+            model, self.page_block if self.paged else 0)
+        if not self.chunked_prefill:
+            return
+        if cfg.sliding_window > 0:
+            raise ValueError(
+                "chunked prefill does not support sliding-window (ring) "
+                "caches yet — serve windowed configs with monolithic "
+                "admission")
+        has_pool = any(a >= 0 for a in
+                       jax.tree.leaves(model.cache_spec(1).paged.seq_axes))
+        if has_pool and eff_block == 0:
+            raise ValueError(
+                "chunked prefill writes prompt KV through the paged pool — "
+                "enable paging (page_block > 0)")
+        if cfg.family in ("ssm", "hybrid") and self.chunk % cfg.ssm.chunk:
+            raise ValueError(
+                f"prefill chunk {self.chunk} must be a multiple of the "
+                f"chunkwise-scan length {cfg.ssm.chunk} for exact "
+                f"chunked-vs-monolithic parity on family '{cfg.family}'")
+
+
+def effective_page_block(model, page_block: int) -> int:
+    """0 when the model has no pageable cache leaves (ssm: recurrent state
+    only) — paging such a family would run pool accounting that backs no
+    memory, so it degrades to the direct path instead."""
+    if page_block <= 0:
+        return 0
+    seq_axes = model.cache_spec(page_block).paged.seq_axes
+    return page_block if any(a >= 0 for a in jax.tree.leaves(seq_axes)) \
+        else 0
+
+
+@dataclass(frozen=True)
+class TokenDelta:
+    """One newly decoded token: its id, its 0-based index in the request's
+    output stream, and the ``perf_counter`` stamp it was emitted at (the
+    raw material for TTFT / inter-token latency)."""
+
+    token: int
+    index: int
+    t: float
+
+
+@dataclass
+class RequestOutput:
+    """One request's streaming update from ``step()`` (or ``abort()``).
+
+    ``deltas`` holds only the tokens NEW since the last update for this
+    request; ``token_ids`` is the full cumulative output. ``finished`` is
+    terminal — after it, the request emits nothing further and its slot,
+    pool blocks and prefix-cache references are already released.
+    ``t_submit``/``t_first``/``t_done`` are ``perf_counter`` stamps
+    (``t_done`` is 0.0 until finished): TTFT is ``t_first - t_submit``,
+    inter-token latencies are the diffs of consecutive delta stamps.
+    """
+
+    rid: int
+    deltas: List[TokenDelta]
+    token_ids: List[int]
+    finished: bool
+    finish_reason: Optional[str]     # one of FINISH_REASONS when finished
+    t_submit: float
+    t_first: float
+    t_done: float
+
+    @property
+    def ttft(self) -> float:
+        """Seconds from submission to the first emitted token — NaN while
+        (or if) no token was ever emitted, e.g. a request aborted straight
+        out of the waiting queue."""
+        return self.t_first - self.t_submit if self.t_first > 0 \
+            else float("nan")

@@ -3,14 +3,33 @@ caches / recurrent state, plus a sampled generation loop."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Tuple
+from typing import Any, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
+from repro.serve.api import SamplingParams
 
 Array = jnp.ndarray
+
+
+def resolve_sampling(n_new: Union[int, SamplingParams], key,
+                     temperature: float) -> Tuple[int, Any, float]:
+    """Normalize the whole-batch generators' sampling arguments: callers
+    pass either the legacy ``(n_new, key, temperature)`` triple or ONE
+    ``SamplingParams`` (the same object the slot engines consume) — whose
+    ``seed`` derives the key when none is given. Stop-token early exit is
+    a per-request notion; the whole-batch engines decode the full budget
+    (use the slot engines for stop/abort semantics)."""
+    if isinstance(n_new, SamplingParams):
+        sp = n_new
+        if key is None:
+            key = jax.random.PRNGKey(sp.seed)
+        return sp.max_new, key, sp.temperature
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return n_new, key, temperature
 
 
 @dataclass
@@ -33,11 +52,14 @@ class ServeEngine:
     def decode_step(self, params, cache, tokens: Array, pos) -> Tuple[Array, Any]:
         return self._decode(params, cache, tokens, jnp.asarray(pos))
 
-    def generate(self, params, batch, n_new: int, key,
-                 temperature: float = 1.0) -> Array:
+    def generate(self, params, batch, n_new: Union[int, SamplingParams],
+                 key=None, temperature: float = 1.0) -> Array:
         """Prefill on the prompt then sample ``n_new`` tokens. Returns
         (B, n_new). Sampling is the Eq. 13 rule restricted (by 1-sparsity)
-        to the single active position — ordinary AR decoding."""
+        to the single active position — ordinary AR decoding. ``n_new``
+        may be a ``SamplingParams`` (its max_new/temperature/seed apply to
+        the whole batch)."""
+        n_new, key, temperature = resolve_sampling(n_new, key, temperature)
         logits, cache = self.prefill(params, batch)
         prompt_len = logits.shape[1]
         last = logits[:, -1]

@@ -28,7 +28,8 @@ from repro.core.ensemble import (PROB_FLOOR, make_stacked_serving,
                                  mix_expert_logits)
 from repro.core.router import CentroidRouter
 from repro.models.model import Model
-from .engine import ServeEngine
+from repro.serve.api import SamplingParams
+from .engine import ServeEngine, resolve_sampling
 
 Array = jnp.ndarray
 
@@ -77,8 +78,12 @@ class DecentralizedServer:
     # grouped top-1 (compute-matched, the paper's main tables)
     # ------------------------------------------------------------------
 
-    def generate_top1(self, batch: Dict[str, Array], n_new: int, key,
+    def generate_top1(self, batch: Dict[str, Array],
+                      n_new: int | SamplingParams, key=None,
                       temperature: float = 1.0) -> np.ndarray:
+        """``n_new`` may be a ``SamplingParams`` — the same object the
+        slot engines consume (max_new/temperature/seed batch-wide)."""
+        n_new, key, temperature = resolve_sampling(n_new, key, temperature)
         feats = batch["features"]
         expert_of = np.asarray(self.router.top1(feats))       # (B,)
         B = expert_of.shape[0]
@@ -108,10 +113,13 @@ class DecentralizedServer:
         logits, _ = prefill_all(stacked, sub)
         return self._mix(logits[:, :, -1], weights)           # (K,B,V)→(B,V)
 
-    def generate_mixture(self, batch: Dict[str, Array], n_new: int, key,
+    def generate_mixture(self, batch: Dict[str, Array],
+                         n_new: int | SamplingParams, key=None,
                          temperature: float = 1.0) -> Array:
         """Top-k mixture decoding: ONE vmapped decode step over the stacked
-        expert params per token, mixture fused into the jitted step."""
+        expert params per token, mixture fused into the jitted step.
+        ``n_new`` may be a ``SamplingParams`` (see ``generate_top1``)."""
+        n_new, key, temperature = resolve_sampling(n_new, key, temperature)
         weights = self.route(batch["features"])               # (B, K)
         sub = {k: v for k, v in batch.items() if k != "features"}
         stacked, prefill_all, mix_decode, _ = self._stacked_core()

@@ -1,6 +1,31 @@
 """Continuous batching: slot-based request schedulers over the decode core
 (vLLM-style, with paged KV caching and chunked-prefill co-scheduling).
 
+Every engine here exposes the incremental request-lifecycle API from
+``repro.serve.api`` as its *primitive* surface:
+
+* ``add_request(prompt, SamplingParams(...), ...) -> rid`` — submit a
+  prompt (or a prebuilt ``Request``) to the engine's waiting queue, at any
+  time. Admission into a slot happens inside ``step()``.
+* ``step() -> list[RequestOutput]`` — run one scheduler step (admission +
+  one co-scheduled prefill-chunk/decode dispatch) and stream back a
+  per-token update for EVERY request that progressed, not just the
+  retirements: each ``RequestOutput`` carries the new ``TokenDelta``s
+  (stamped for TTFT/ITL), the cumulative ids, and — once finished — a
+  ``finish_reason`` in {length, stop, aborted, truncated}.
+* ``abort(rid) -> RequestOutput | None`` — cancel a request at any point
+  in its life: still queued, mid-prefill, or mid-decode. Frees its slot,
+  returns its pool blocks, and drops its prefix-cache references; returns
+  the terminal output (``finish_reason == "aborted"``) or None if the rid
+  is unknown or already finished (a no-op).
+* ``has_unfinished() -> bool`` — anything still waiting or active.
+
+``make_engine(model, params | experts=..., router=..., config=EngineConfig)``
+builds the right engine for a deployment; the legacy ``serve(queue)`` is
+now a thin drain loop over exactly these primitives (submit everything,
+step until idle, collect the finished outputs) and keeps exact greedy
+parity with the pre-redesign servers.
+
 Requests arrive with different prompt lengths and budgets; a server admits
 each into a free slot, decodes ALL active slots in lockstep with a per-slot
 position vector, and retires finished requests — so new work never waits
@@ -77,6 +102,8 @@ import numpy as np
 from repro.core.ensemble import (PROB_FLOOR, make_stacked_chunk_fns,
                                  make_stacked_serving, mix_expert_logits)
 from repro.models.model import Model
+from repro.serve.api import (EngineConfig, RequestOutput, SamplingParams,
+                             TokenDelta, effective_page_block)
 from repro.serve.prefix_cache import PrefixCache, block_keys
 
 Array = jnp.ndarray
@@ -86,6 +113,11 @@ logger = logging.getLogger(__name__)
 
 @dataclass
 class Request:
+    """One in-flight request. ``SamplingParams`` is the canonical carrier
+    of the decoding controls; the flat ``max_new``/``temperature``/
+    ``top_k``/``seed`` fields remain as the legacy construction surface
+    (and are kept in sync with ``params`` either way)."""
+
     rid: int
     tokens: np.ndarray            # (prompt_len,) int32
     max_new: int
@@ -97,14 +129,54 @@ class Request:
     top_k: int = 0                # sample from the k highest-scoring tokens
     #                             # (0 → the full vocabulary)
     seed: int = 0                 # per-request sampling stream
+    params: Optional[SamplingParams] = None
     out: List[int] = field(default_factory=list)
     truncated: bool = False       # retired at the context bound, not done
+    finish_reason: Optional[str] = None     # set exactly once, at retirement
+    t_submit: float = 0.0         # perf_counter at add_request
     t_first: float = 0.0          # perf_counter at the first emitted token
     t_done: float = 0.0           # perf_counter at retirement
+    t_tok: List[float] = field(default_factory=list)   # per-token stamps
+    emitted: int = 0              # tokens already streamed out via step()
+
+    def __post_init__(self):
+        if self.params is None:
+            self.params = SamplingParams(
+                max_new=self.max_new, temperature=self.temperature,
+                top_k=self.top_k, seed=self.seed)
+        else:                     # params is canonical: mirror to legacy
+            self.max_new = self.params.max_new
+            self.temperature = self.params.temperature
+            self.top_k = self.params.top_k
+            self.seed = self.params.seed
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new
+
+    @property
+    def hit_stop(self) -> bool:
+        """The LAST generated token is a stop/eos id (prompt tokens never
+        trigger — only the output stream is inspected)."""
+        s = self.params.stop_set
+        return bool(s) and bool(self.out) and self.out[-1] in s
+
+    def reason_now(self) -> Optional[str]:
+        """Retirement reason after the latest emitted token, or None if
+        the request should keep decoding. Capacity truncation is the
+        caller's to detect (it is positional, not content, state)."""
+        if self.hit_stop:
+            return "stop"
+        if self.done:
+            return "length"
+        return None
+
+    def record(self, tok: int, t: Optional[float] = None) -> None:
+        """Append one generated token with its latency stamp."""
+        t = time.perf_counter() if t is None else t
+        self.out.append(int(tok))
+        self.t_tok.append(t)
+        self.t_first = self.t_first or t
 
     def batch(self, pad_to: int = 0) -> Dict[str, Array]:
         """Single-row prefill batch (tokens + modality extras). ``pad_to``
@@ -147,6 +219,23 @@ def _sample_tokens(scores, temps, top_ks, seeds, counts):
 
 
 sample_tokens = jax.jit(_sample_tokens)
+
+
+_FEATURES_MSG = ("request {rid}: this engine routes on frozen-encoder "
+                 "features — pass features= to add_request")
+
+
+def _as_request(prompt, params: Optional[SamplingParams], extras,
+                features, rid: int) -> Request:
+    """The one place a submission becomes a ``Request``: pass a prebuilt
+    ``Request`` through untouched, or wrap a token-id array with its
+    ``SamplingParams`` (shared by the engines' ``add_request`` and the
+    decentralized front end)."""
+    if isinstance(prompt, Request):
+        return prompt
+    sp = params if params is not None else SamplingParams()
+    return Request(rid, np.asarray(prompt, dtype=np.int32), sp.max_new,
+                   features=features, extras=dict(extras or {}), params=sp)
 
 
 def _raise_dropped(dropped: List[str], n_finished: int,
@@ -233,13 +322,13 @@ class _SlotTable:
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.last_tok = np.zeros(n_slots, dtype=np.int32)
         self.admit_retired: List[Request] = []  # retired without a slot
+        self.waiting: List[Request] = []        # submitted, not yet admitted
+        self._next_rid = 0                      # auto-assigned request ids
+        self._needs_features = False            # mixture/top1 routing input
+        self.n_aborted = 0                      # lifetime abort() count
+        self.n_stopped = 0                      # lifetime stop-token count
         self.chunk = chunk
         self.chunked = chunk > 0
-        if self.chunked and window > 0:
-            raise ValueError(
-                "chunked prefill does not support sliding-window (ring) "
-                "caches yet — serve windowed configs with monolithic "
-                "admission")
         self.token_budget = token_budget if token_budget > 0 \
             else n_slots + chunk
         self.prefilling = [False] * n_slots
@@ -272,12 +361,9 @@ class _SlotTable:
             self.n_alloc = np.zeros(n_slots, dtype=np.int32)
         self.prefix: Optional[PrefixCache] = None
         if prefix_cache:
-            if not (self.paged and self.chunked):
-                raise ValueError(
-                    "the prefix cache shares prompt KV through the paged "
-                    "pool and fills misses with chunked prefill — enable "
-                    "paging (page_block > 0) and chunked prefill "
-                    "(chunk > 0)")
+            # flag combinations were vetted by EngineConfig.validate();
+            # reaching here with prefix on means paged + chunked are too
+            assert self.paged and self.chunked, (block_size, chunk)
             self.prefix = PrefixCache(self.allocator, block_size)
 
     def free_slots(self) -> List[int]:
@@ -297,8 +383,140 @@ class _SlotTable:
     def admit(self, req: Request) -> bool:
         raise NotImplementedError
 
-    def step(self) -> List[Request]:
+    def _decode_step(self) -> List[Request]:
+        """One raw scheduler dispatch (lockstep decode, optionally fused
+        with a prefill chunk). Returns the requests retired by it."""
         raise NotImplementedError
+
+    # ------------------------------------------------------------------
+    # The incremental request-lifecycle API (the primitive surface)
+    # ------------------------------------------------------------------
+
+    def add_request(self, prompt, params: Optional[SamplingParams] = None,
+                    extras: Optional[Dict[str, np.ndarray]] = None, *,
+                    features: Optional[np.ndarray] = None,
+                    rid: Optional[int] = None) -> int:
+        """Submit a prompt (token-id array) — or a prebuilt ``Request`` —
+        to the waiting queue and return its rid. Admission into a slot
+        happens inside ``step()``; submission never blocks and never
+        dispatches device work. A request NO capacity could ever admit
+        (prompt past the serving context, or a reservation bigger than
+        the whole pool) is rejected here with a ValueError rather than
+        poisoning the head of the queue."""
+        req = _as_request(prompt, params, extras, features,
+                          self._next_rid if rid is None else rid)
+        if self._needs_features and req.features is None:
+            raise ValueError(_FEATURES_MSG.format(rid=req.rid))
+        self._reject_unservable(req)
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        req.t_submit = req.t_submit or time.perf_counter()
+        self.waiting.append(req)
+        return req.rid
+
+    def _reject_unservable(self, req: Request) -> None:
+        """Fail fast at submission on requests that can never be admitted,
+        even by an idle server: the engine runs forever, so parking one at
+        the queue head would wedge every later arrival behind it."""
+        width = self._prefill_width(req)
+        self._reject_overlong(req, width)
+        # monolithic admission of a context-filling prompt retires at
+        # admission without reserving; every other paged path reserves the
+        # whole prompt — which needs `need` DISTINCT physical blocks
+        # (prefix-shared blocks live in the same pool, so sharing can't
+        # shrink the requirement below the table's span)
+        if self.paged and (self.chunked or width < self.cache_len):
+            need = self.nb_slot if self.ring else \
+                max(min(-(-width // self.block_size), self.nb_slot), 1)
+            usable = self.allocator.n_blocks - 1
+            if need > usable:
+                raise ValueError(
+                    f"request {req.rid}: its prompt reservation needs "
+                    f"{need} KV blocks but the pool has only {usable} "
+                    f"usable (pool_blocks={self.allocator.n_blocks}, "
+                    f"page_block={self.block_size}) — provision more "
+                    f"pool_blocks or shorten the prompt")
+
+    def step(self) -> List[RequestOutput]:
+        """One engine step: admit from the waiting queue while slots (and,
+        paged, pool blocks) allow, then run one co-scheduled prefill-chunk
+        / lockstep-decode dispatch. Streams back a ``RequestOutput`` for
+        every request that progressed — finished ones first (admission
+        retirements, then this step's), then the live per-token deltas in
+        slot order."""
+        self._admit_waiting()
+        finished = self._drain_admit_retired()
+        if self.active:
+            finished += self._decode_step()
+        outs = [self._output(r) for r in finished]
+        for req in (self.slot_req[s] for s in range(self.n_slots)):
+            if req is not None and req.emitted < len(req.out):
+                outs.append(self._output(req))
+        return outs
+
+    def abort(self, rid: int) -> Optional[RequestOutput]:
+        """Cancel a request wherever it is in its life — still queued,
+        mid-prefill, or mid-decode. Frees its slot, returns its pool
+        blocks, and drops its prefix-cache references (shared cached
+        blocks stay resident for other holders / the LRU list). Returns
+        the terminal output (``finish_reason == "aborted"``); an unknown
+        or already-finished rid is a no-op returning None."""
+        for i, req in enumerate(self.waiting):
+            if req.rid == rid:
+                self.waiting.pop(i)
+                return self._finish_aborted(req)
+        for slot, req in enumerate(self.slot_req):
+            if req is None or req.rid != rid:
+                continue
+            if self.prefilling[slot]:
+                self.prefill_order.remove(slot)
+                self.prefilling[slot] = False
+                self.prefill_x[slot] = None
+                self.prefill_carry[slot] = None
+                self.prefill_keys[slot] = None
+                self.prefill_pos[slot] = 0
+                self.prefill_base[slot] = 0
+                self.prefill_width[slot] = 0
+            self._release(slot)
+            return self._finish_aborted(req)
+        return None
+
+    def has_unfinished(self) -> bool:
+        """True while any request is waiting or holds a slot."""
+        return bool(self.waiting) or bool(self.active)
+
+    def _finish_aborted(self, req: Request) -> RequestOutput:
+        req.finish_reason = "aborted"
+        req.t_done = time.perf_counter()
+        self.n_aborted += 1
+        return self._output(req)
+
+    def _admit_waiting(self) -> None:
+        """FCFS admission from the waiting queue: stop at the first request
+        that can't be admitted (no free slot, or the pool can't reserve its
+        blocks yet — it retries next step). A request no idle server can
+        admit would wait forever: raise instead."""
+        while self.waiting and self.free_slots():
+            if not self.admit(self.waiting[0]):
+                break                # wait for blocks to free up
+            self.waiting.pop(0)
+        if self.waiting and not self.active:
+            raise RuntimeError(
+                f"cannot admit request {self.waiting[0].rid} even on an "
+                f"idle server — the KV block pool is too small for it")
+
+    def _output(self, req: Request) -> RequestOutput:
+        """Build the streaming update for ``req`` (tokens newly decoded
+        since its last update) and advance its emission cursor."""
+        new = req.out[req.emitted:]
+        stamps = req.t_tok[req.emitted:]
+        deltas = [TokenDelta(tok, req.emitted + i, t)
+                  for i, (tok, t) in enumerate(zip(new, stamps))]
+        req.emitted = len(req.out)
+        return RequestOutput(
+            rid=req.rid, deltas=deltas, token_ids=list(req.out),
+            finished=req.finish_reason is not None,
+            finish_reason=req.finish_reason, t_submit=req.t_submit,
+            t_first=req.t_first, t_done=req.t_done)
 
     def _prefill_width(self, req: Request) -> int:
         """Decoder positions a request's prefill consumes (so admission can
@@ -342,8 +560,9 @@ class _SlotTable:
         else:
             self.cache = self.spec.insert(self.cache, row_cache, slot)
         self._occupy(slot, req, first, width)
-        if req.done:                     # max_new == 1
-            self._retire_from_slot(slot, req, truncated=False)
+        reason = req.reason_now()        # max_new == 1, or first tok stops
+        if reason:
+            self._retire_from_slot(slot, req, reason)
             self.admit_retired.append(req)
 
     # ------------------------------------------------------------------
@@ -435,11 +654,18 @@ class _SlotTable:
     def _retire_at_admission(self, req: Request, first_tok: int) -> None:
         """The prompt already fills the context bound: the request keeps its
         single prefill token and retires without ever holding a slot."""
-        req.out.append(first_tok)
-        req.t_first = req.t_first or time.perf_counter()
+        req.record(first_tok)
         req.t_done = time.perf_counter()
-        req.truncated = not req.done
+        self._set_reason(req, req.reason_now() or "truncated")
         self.admit_retired.append(req)
+
+    def _set_reason(self, req: Request, reason: str) -> None:
+        """Stamp the terminal ``finish_reason`` (keeping the legacy
+        ``truncated`` flag in sync) and bump the per-reason counters."""
+        req.finish_reason = reason
+        req.truncated = reason == "truncated"
+        if reason == "stop":
+            self.n_stopped += 1
 
     def _drain_admit_retired(self) -> List[Request]:
         out, self.admit_retired = self.admit_retired, []
@@ -451,33 +677,36 @@ class _SlotTable:
 
     def _occupy(self, slot: int, req: Request, first_tok: int,
                 prompt_len: int) -> None:
-        req.out.append(first_tok)
-        req.t_first = req.t_first or time.perf_counter()
+        req.record(first_tok)
         self.slot_req[slot] = req
         self.pos[slot] = prompt_len
         self.last_tok[slot] = first_tok
 
     def _advance(self, next_tok: np.ndarray) -> List[Request]:
         """Record one decoded token per decoding slot; retire finished
-        requests (capacity-exact: position cache_len - 1 is decodable).
-        A capacity retirement marks the request ``truncated``.
+        requests — budget exhausted (``length``), a generated stop/eos id
+        (``stop``), or the capacity bound (``truncated``; capacity-exact:
+        position cache_len - 1 is decodable).
         next_tok: (n_slots,) int32 (inactive/prefilling rows ignored)."""
         retired = []
+        t = time.perf_counter()
         for slot in self.decoding:
             req = self.slot_req[slot]
-            req.out.append(int(next_tok[slot]))
+            req.record(int(next_tok[slot]), t)
             self.pos[slot] += 1
             self.last_tok[slot] = next_tok[slot]
-            if req.done or self.pos[slot] >= self.cache_len:
-                self._retire_from_slot(slot, req, truncated=not req.done)
+            reason = req.reason_now() or \
+                ("truncated" if self.pos[slot] >= self.cache_len else None)
+            if reason:
+                self._retire_from_slot(slot, req, reason)
                 retired.append(req)
         return retired
 
-    def _retire_from_slot(self, slot: int, req: Request, *,
-                          truncated: bool) -> None:
-        """Finalize a request that currently holds ``slot``: stamp, flag,
-        release the slot (and its blocks)."""
-        req.truncated = truncated
+    def _retire_from_slot(self, slot: int, req: Request,
+                          reason: str) -> None:
+        """Finalize a request that currently holds ``slot``: stamp the
+        finish reason, release the slot (and its blocks)."""
+        self._set_reason(req, reason)
         req.t_done = time.perf_counter()
         self._release(slot)
 
@@ -529,9 +758,13 @@ class _SlotTable:
     # ------------------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
-        """Serving stats: active slots, pool free blocks, prefix-cache hit
-        rate — the numbers the serve log and ``occupancy()`` surface."""
-        out: Dict[str, Any] = {"active": len(self.active)}
+        """Serving stats: active slots, waiting depth, lifetime
+        aborted/stopped counters, pool free blocks, prefix-cache hit rate
+        — the numbers the serve log and ``occupancy()`` surface."""
+        out: Dict[str, Any] = {"active": len(self.active),
+                               "waiting": len(self.waiting),
+                               "aborted": self.n_aborted,
+                               "stopped": self.n_stopped}
         if self.paged:
             out["pool_free_blocks"] = self.allocator.n_free
             out["pool_blocks"] = self.allocator.n_blocks
@@ -668,14 +901,15 @@ class _SlotTable:
         self.prefill_keys[slot] = None
         self.prefill_base[slot] = 0
         if width >= self.cache_len:      # prompt fills the context bound
-            req.out.append(first)
-            req.t_first = req.t_first or time.perf_counter()
-            self._retire_from_slot(slot, req, truncated=not req.done)
+            req.record(first)
+            self._retire_from_slot(slot, req,
+                                   req.reason_now() or "truncated")
             return [req]
         self.cache = self.spec.insert_direct(self.cache, carry, slot)
         self._occupy(slot, req, first, width)
-        if req.done:                     # max_new == 1
-            self._retire_from_slot(slot, req, truncated=False)
+        reason = req.reason_now()        # max_new == 1, or first tok stops
+        if reason:
+            self._retire_from_slot(slot, req, reason)
             return [req]
         return []
 
@@ -696,7 +930,9 @@ class _SlotTable:
 
     def serve(self, queue: List[Request], *, max_steps: int = 10_000
               ) -> Dict[int, List[int]]:
-        """Drive the queue to completion with continuous admission.
+        """Drive a queue to completion — a thin drain loop over the
+        incremental API (``add_request`` everything, ``step`` until
+        nothing is unfinished, collect the finished outputs).
 
         Admission can fail transiently on a paged server (not enough free
         KV blocks yet) — the request stays pending until retirements free
@@ -705,62 +941,39 @@ class _SlotTable:
         progress, including mid-prefill requests with their partial
         position.
         """
-        pending = list(queue)
+        for req in queue:
+            self.add_request(req)
         finished: Dict[int, List[int]] = {}
+        reasons: Dict[int, str] = {}
         for _ in range(max_steps):
-            while pending and self.free_slots():
-                if not self.admit(pending[0]):
-                    break            # wait for blocks to free up
-                pending.pop(0)
-            for req in self._drain_admit_retired():
-                finished[req.rid] = req.out
-            if not self.active:
-                if not pending:
-                    break
-                raise RuntimeError(
-                    f"cannot admit request {pending[0].rid} even on an idle "
-                    f"server — the KV block pool is too small for it")
-            for req in self.step():
-                finished[req.rid] = req.out
-        dropped = [f"{r.rid} (queued)" for r in pending] + \
+            for out in self.step():
+                if out.finished:
+                    finished[out.rid] = out.token_ids
+                    reasons[out.rid] = out.finish_reason
+            if not self.has_unfinished():
+                break
+        dropped = [f"{r.rid} (queued)" for r in self.waiting] + \
             self._drop_details()
         if dropped:
             _raise_dropped(dropped, len(finished), max_steps)
-        if self.paged:
-            logger.info("serve: %d finished, stats %s", len(finished),
-                        self.stats())
+        logger.info("serve: %d finished (finish_reasons %s), stats %s",
+                    len(finished), reasons, self.stats())
         return finished
 
 
-def effective_page_block(model: Model, page_block: int) -> int:
-    """0 when the model has no pageable cache leaves (ssm: recurrent state
-    only) — paging such a family would run pool accounting that backs no
-    memory, so it degrades to the direct path instead."""
-    if page_block <= 0:
-        return 0
-    seq_axes = model.cache_spec(page_block).paged.seq_axes
-    return page_block if any(a >= 0 for a in jax.tree.leaves(seq_axes)) \
-        else 0
-
-
-def _validate_chunked(model: Model, paged: bool, chunk: int) -> None:
-    """Configuration fences for chunked prefill. Attention families write
-    their prompt KV through the block pool, so paging is mandatory for
-    them; recurrent chunk boundaries must align with the chunkwise-scan
-    length or the inter-chunk state recombination reassociates the float
-    reductions and greedy parity with monolithic prefill is lost."""
-    cfg = model.cfg
-    has_pool = any(a >= 0 for a in
-                   jax.tree.leaves(model.cache_spec(1).paged.seq_axes))
-    if has_pool and not paged:
-        raise ValueError(
-            "chunked prefill writes prompt KV through the paged pool — "
-            "enable paging (page_block > 0)")
-    if cfg.family in ("ssm", "hybrid") and chunk % cfg.ssm.chunk:
-        raise ValueError(
-            f"prefill chunk {chunk} must be a multiple of the "
-            f"chunkwise-scan length {cfg.ssm.chunk} for exact "
-            f"chunked-vs-monolithic parity on family '{cfg.family}'")
+def _legacy_config(n_slots: int, cache_len: int, *, page_block: int,
+                   pool_blocks: int, chunk: int, token_budget: int,
+                   prefix_cache: bool, use_kernel: bool,
+                   strategy: str = "top1") -> EngineConfig:
+    """Map the pre-redesign constructor kwargs onto an ``EngineConfig`` so
+    every entry point funnels through one ``validate()``."""
+    return EngineConfig(
+        n_slots=n_slots, cache_len=cache_len, paged=page_block > 0,
+        page_block=page_block if page_block > 0 else 16,
+        pool_blocks=pool_blocks, chunked_prefill=chunk > 0,
+        chunk=chunk if chunk > 0 else 16, token_budget=token_budget,
+        prefix_cache=prefix_cache, use_kernel=use_kernel,
+        strategy=strategy)
 
 
 def make_chunk_fns(model: Model, cache_len: int, chunk: int, *,
@@ -847,17 +1060,30 @@ class SlotServer(_SlotTable):
     ``Model.prefix_cacheable``) degrade to the uncached path.
     """
 
-    def __init__(self, model: Model, params, n_slots: int, cache_len: int,
-                 *, use_kernel: bool = False, serve_fns=None,
-                 page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
-                 token_budget: int = 0, chunk_fns=None,
-                 prefix_cache: bool = False):
-        page_block = effective_page_block(model, page_block)
+    def __init__(self, model: Model, params, n_slots: int = 0,
+                 cache_len: int = 0, *, use_kernel: bool = False,
+                 serve_fns=None, page_block: int = 0, pool_blocks: int = 0,
+                 chunk: int = 0, token_budget: int = 0, chunk_fns=None,
+                 prefix_cache: bool = False,
+                 config: Optional[EngineConfig] = None):
+        if config is None:
+            config = _legacy_config(
+                n_slots, cache_len, page_block=page_block,
+                pool_blocks=pool_blocks, chunk=chunk,
+                token_budget=token_budget, prefix_cache=prefix_cache,
+                use_kernel=use_kernel)
+        config.validate(model)
+        self.config = config
+        n_slots, cache_len = config.n_slots, config.cache_len
+        use_kernel = config.use_kernel
+        page_block = effective_page_block(
+            model, config.page_block if config.paged else 0)
+        chunk = config.chunk if config.chunked_prefill else 0
         super().__init__(n_slots, cache_len, block_size=page_block,
-                         n_blocks=pool_blocks,
+                         n_blocks=config.pool_blocks,
                          window=model.cfg.sliding_window, chunk=chunk,
-                         token_budget=token_budget,
-                         prefix_cache=prefix_cache
+                         token_budget=config.token_budget,
+                         prefix_cache=config.prefix_cache
                          and model.prefix_cacheable)
         self.model, self.params = model, params
         self.use_kernel = use_kernel
@@ -871,7 +1097,6 @@ class SlotServer(_SlotTable):
         self._prefill, self._decode = serve_fns or make_serve_fns(
             model, cache_len, use_kernel=use_kernel, paged=self.paged)
         if self.chunked:
-            _validate_chunked(model, self.paged, chunk)
             self._prep, self._fused, self._chunk_only = \
                 chunk_fns or make_chunk_fns(model, cache_len, chunk,
                                             use_kernel=use_kernel,
@@ -904,11 +1129,11 @@ class SlotServer(_SlotTable):
         self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 
-    def step(self) -> List[Request]:
-        """One scheduler step. Monolithic: lockstep decode over every
-        active slot. Chunked: co-schedule the lockstep decode with one
-        prefill chunk under the token budget, in a single jitted dispatch.
-        Returns requests retired this step."""
+    def _decode_step(self) -> List[Request]:
+        """One raw scheduler dispatch. Monolithic: lockstep decode over
+        every active slot. Chunked: co-schedule the lockstep decode with
+        one prefill chunk under the token budget, in a single jitted
+        dispatch. Returns requests retired this step."""
         dec = self.decoding
         do_chunk = self.chunked and self._schedule_chunk()
         if not dec and not do_chunk:
@@ -958,18 +1183,33 @@ class MixtureSlotServer(_SlotTable):
     experts of a slot share ONE block table."""
 
     def __init__(self, model: Model, expert_params: List[Any], router,
-                 n_slots: int, cache_len: int, *, use_kernel: bool = False,
-                 page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
-                 token_budget: int = 0, prefix_cache: bool = False):
-        page_block = effective_page_block(model, page_block)
+                 n_slots: int = 0, cache_len: int = 0, *,
+                 use_kernel: bool = False, page_block: int = 0,
+                 pool_blocks: int = 0, chunk: int = 0,
+                 token_budget: int = 0, prefix_cache: bool = False,
+                 config: Optional[EngineConfig] = None):
+        if config is None:
+            config = _legacy_config(
+                n_slots, cache_len, page_block=page_block,
+                pool_blocks=pool_blocks, chunk=chunk,
+                token_budget=token_budget, prefix_cache=prefix_cache,
+                use_kernel=use_kernel, strategy="mixture")
+        config.validate(model)
+        self.config = config
+        n_slots, cache_len = config.n_slots, config.cache_len
+        use_kernel = config.use_kernel
+        page_block = effective_page_block(
+            model, config.page_block if config.paged else 0)
+        chunk = config.chunk if config.chunked_prefill else 0
         super().__init__(n_slots, cache_len, block_size=page_block,
-                         n_blocks=pool_blocks,
+                         n_blocks=config.pool_blocks,
                          window=model.cfg.sliding_window, chunk=chunk,
-                         token_budget=token_budget,
-                         prefix_cache=prefix_cache
+                         token_budget=config.token_budget,
+                         prefix_cache=config.prefix_cache
                          and model.prefix_cacheable)
         self._seq_axis = 2      # embedded prompts carry K at axis 0
         self._from_probs = True  # the mixed scores are Eq. 27 probabilities
+        self._needs_features = True   # admission routes on features
         self.model, self.router = model, router
         self.K = len(expert_params)
         self.use_kernel = use_kernel
@@ -977,7 +1217,6 @@ class MixtureSlotServer(_SlotTable):
             make_stacked_serving(model, expert_params, cache_len,
                                  use_kernel=use_kernel, paged=self.paged)
         if self.chunked:
-            _validate_chunked(model, self.paged, chunk)
             self._prep_all, chunk_all = \
                 make_stacked_chunk_fns(model, self.stacked, param_axes,
                                        cache_len, chunk,
@@ -1044,7 +1283,7 @@ class MixtureSlotServer(_SlotTable):
         self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 
-    def step(self) -> List[Request]:
+    def _decode_step(self) -> List[Request]:
         dec = self.decoding
         do_chunk = self.chunked and self._schedule_chunk()
         if not dec and not do_chunk:
@@ -1106,78 +1345,126 @@ class DecentralizedSlotServer:
     """
 
     def __init__(self, model: Model, expert_params: List[Any], router,
-                 n_slots: int, cache_len: int, *, strategy: str = "top1",
-                 use_kernel: bool = False, page_block: int = 0,
-                 pool_blocks: int = 0, chunk: int = 0,
-                 token_budget: int = 0, prefix_cache: bool = False):
-        assert strategy in ("top1", "mixture"), strategy
+                 n_slots: int = 0, cache_len: int = 0, *,
+                 strategy: str = "top1", use_kernel: bool = False,
+                 page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
+                 token_budget: int = 0, prefix_cache: bool = False,
+                 config: Optional[EngineConfig] = None):
+        if config is None:
+            config = _legacy_config(
+                n_slots, cache_len, page_block=page_block,
+                pool_blocks=pool_blocks, chunk=chunk,
+                token_budget=token_budget, prefix_cache=prefix_cache,
+                use_kernel=use_kernel, strategy=strategy)
+        config.validate(model)
+        self.config = config
         self.model, self.router = model, router
         self.K = len(expert_params)
-        self.strategy = strategy
-        page_block = effective_page_block(model, page_block)
-        if strategy == "top1":
-            fns = make_serve_fns(model, cache_len, use_kernel=use_kernel,
-                                 paged=page_block > 0)
+        self.strategy = config.strategy
+        self._next_rid = 0
+        if self.strategy == "top1":
+            eff_block = effective_page_block(
+                model, config.page_block if config.paged else 0)
+            cache_len, chunk = config.cache_len, \
+                config.chunk if config.chunked_prefill else 0
+            fns = make_serve_fns(model, cache_len,
+                                 use_kernel=config.use_kernel,
+                                 paged=eff_block > 0)
             cfns = make_chunk_fns(model, cache_len, chunk,
-                                  use_kernel=use_kernel,
-                                  paged=page_block > 0) if chunk > 0 \
+                                  use_kernel=config.use_kernel,
+                                  paged=eff_block > 0) if chunk > 0 \
                 else None
-            self.pods = [SlotServer(model, p, n_slots, cache_len,
-                                    use_kernel=use_kernel, serve_fns=fns,
-                                    page_block=page_block,
-                                    pool_blocks=pool_blocks, chunk=chunk,
-                                    token_budget=token_budget,
-                                    chunk_fns=cfns,
-                                    prefix_cache=prefix_cache)
+            self.pods = [SlotServer(model, p, config=config,
+                                    serve_fns=fns, chunk_fns=cfns)
                          for p in expert_params]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,
-                                          n_slots, cache_len,
-                                          use_kernel=use_kernel,
-                                          page_block=page_block,
-                                          pool_blocks=pool_blocks,
-                                          chunk=chunk,
-                                          token_budget=token_budget,
-                                          prefix_cache=prefix_cache)
+                                          config=config)
 
     def route(self, queue: List[Request]) -> np.ndarray:
         feats = np.stack([r.features for r in queue])
         return np.asarray(self.router.top1(jnp.asarray(feats)))
 
+    # ------------------------------------------------------------------
+    # Incremental API: the front-end router runs at submission time
+    # ------------------------------------------------------------------
+
+    def add_request(self, prompt, params: Optional[SamplingParams] = None,
+                    extras: Optional[Dict[str, np.ndarray]] = None, *,
+                    features: Optional[np.ndarray] = None,
+                    rid: Optional[int] = None) -> int:
+        """Submit a request: the Eq. 28 centroid router assigns it at the
+        front end — to its top-1 expert's pod, or (mixture) straight into
+        the stacked core's queue."""
+        if self.strategy == "mixture":
+            rid = self.core.add_request(prompt, params, extras,
+                                        features=features, rid=rid)
+            self._next_rid = self.core._next_rid
+            return rid
+        req = _as_request(prompt, params, extras, features,
+                          self._next_rid if rid is None else rid)
+        if req.features is None:
+            raise ValueError(_FEATURES_MSG.format(rid=req.rid))
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        # submission is now, not when the pod sees the request — the
+        # front-end routing dispatch must count toward TTFT
+        req.t_submit = req.t_submit or time.perf_counter()
+        k = int(np.asarray(self.router.top1(
+            jnp.asarray(np.asarray(req.features)[None])))[0])
+        return self.pods[k].add_request(req)
+
+    def step(self) -> List[RequestOutput]:
+        """One step of every pod (in pod order — admission then the fused
+        dispatch, exactly the legacy drive loop's schedule), concatenating
+        their streamed outputs."""
+        if self.strategy == "mixture":
+            return self.core.step()
+        outs: List[RequestOutput] = []
+        for pod in self.pods:
+            outs += pod.step()
+        return outs
+
+    def abort(self, rid: int) -> Optional[RequestOutput]:
+        """Cancel a request on whichever pod holds it (no-op → None)."""
+        if self.strategy == "mixture":
+            return self.core.abort(rid)
+        for pod in self.pods:
+            out = pod.abort(rid)
+            if out is not None:
+                return out
+        return None
+
+    def has_unfinished(self) -> bool:
+        if self.strategy == "mixture":
+            return self.core.has_unfinished()
+        return any(pod.has_unfinished() for pod in self.pods)
+
     def serve(self, queue: List[Request], *, max_steps: int = 10_000
               ) -> Dict[int, List[int]]:
+        """Drain loop over the incremental API (see ``_SlotTable.serve``);
+        requests are routed to their pods at submission."""
         if not queue:
             return {}
         if self.strategy == "mixture":
             return self.core.serve(queue, max_steps=max_steps)
-        expert_of = self.route(queue)
-        pending: List[List[Request]] = [[] for _ in range(self.K)]
-        for req, k in zip(queue, expert_of):
-            pending[int(k)].append(req)
+        for req in queue:
+            self.add_request(req)
         finished: Dict[int, List[int]] = {}
+        reasons: Dict[int, str] = {}
         for _ in range(max_steps):
-            idle = True
-            for k, pod in enumerate(self.pods):
-                while pending[k] and pod.free_slots():
-                    if not pod.admit(pending[k][0]):
-                        break        # pod's block pool is full right now
-                    pending[k].pop(0)
-                for req in pod._drain_admit_retired():
-                    finished[req.rid] = req.out
-                if pending[k] and not pod.active:
-                    raise RuntimeError(
-                        f"cannot admit request {pending[k][0].rid} even on "
-                        f"idle pod {k} — its KV block pool is too small")
-                if pod.active or pending[k]:
-                    idle = False
-                for req in pod.step():
-                    finished[req.rid] = req.out
-            if idle:
+            for out in self.step():
+                if out.finished:
+                    finished[out.rid] = out.token_ids
+                    reasons[out.rid] = out.finish_reason
+            if not self.has_unfinished():
                 break
-        dropped = [f"{r.rid} (queued)" for reqs in pending for r in reqs] + \
+        dropped = [f"{r.rid} (queued)"
+                   for pod in self.pods for r in pod.waiting] + \
             [d for pod in self.pods for d in pod._drop_details()]
         if dropped:
             _raise_dropped(dropped, len(finished), max_steps)
+        logger.info("serve: %d finished (finish_reasons %s), pods %s",
+                    len(finished), reasons, self.occupancy())
         return finished
 
     def occupancy(self) -> List[Dict[str, Any]]:
@@ -1188,3 +1475,37 @@ class DecentralizedSlotServer:
         the cache is on."""
         pods = [self.core] if self.strategy == "mixture" else self.pods
         return [p.stats() for p in pods]
+
+
+def make_engine(model: Model, params: Any = None, *,
+                experts: Optional[List[Any]] = None, router=None,
+                config: Optional[EngineConfig] = None):
+    """Build the serving engine a deployment needs from ONE validated
+    ``EngineConfig`` — replacing the three hand-wired constructors.
+
+    * ``make_engine(model, params, config=cfg)`` — a single-model
+      ``SlotServer``.
+    * ``make_engine(model, experts=[...], router=r, config=cfg)`` — the
+      decentralized deployment (paper §5.2): ``cfg.strategy == "top1"``
+      builds one pod per expert behind the Eq. 28 front-end router
+      (sharing the jitted serve/chunk fns across pods);
+      ``"mixture"`` builds the stacked-expert Eq. 27 core.
+
+    Every engine returned speaks the same incremental API:
+    ``add_request`` / ``step`` / ``abort`` / ``has_unfinished`` (plus the
+    legacy ``serve(queue)`` drain wrapper).
+    """
+    config = config if config is not None else EngineConfig()
+    config.validate(model)
+    if experts is not None:
+        if router is None:
+            raise ValueError(
+                "decentralized serving routes on the centroid router — "
+                "pass router= alongside experts=")
+        return DecentralizedSlotServer(model, experts, router,
+                                       config=config)
+    if params is None:
+        raise ValueError(
+            "single-model serving needs the model's params (or pass "
+            "experts= and router= for the decentralized deployment)")
+    return SlotServer(model, params, config=config)

@@ -1,0 +1,464 @@
+"""The online serving API.
+
+* ``EngineConfig.validate()`` owns the whole feature-dependency matrix
+  (paged/chunked/prefix/token-budget) — bad combinations raise one
+  actionable ValueError naming the missing prerequisite.
+* ``SamplingParams.stop_token_ids``/``eos_token_id`` retire requests as
+  soon as a stop id is GENERATED (finish_reason="stop"), return their
+  pool blocks, and never leak the post-stop tail into the prefix cache.
+* The incremental surface: ``add_request`` → ``step`` streams per-token
+  ``TokenDelta``s with TTFT/ITL stamps; ``abort`` frees the slot, the
+  pool blocks, and the prefix-cache references wherever the request is
+  in its life (queued / mid-prefill / mid-decode) and is a no-op on
+  unknown or finished rids.
+* The interleaved add/stream/abort scenario holds on all three engines
+  (``SlotServer``, ``MixtureSlotServer``, ``DecentralizedSlotServer``)
+  with exact greedy parity for the surviving requests.
+"""
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.router import CentroidRouter, RouterConfig
+from repro.models import build_model
+from repro.serve.api import EngineConfig, RequestOutput, SamplingParams
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import (DecentralizedSlotServer,
+                                   MixtureSlotServer, Request, SlotServer,
+                                   make_engine)
+
+CACHE_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def ref_greedy(model, params, tokens, n_new, cache_len=CACHE_LEN):
+    """Solo per-request greedy decode — the parity oracle."""
+    engine = ServeEngine(model, cache_len)
+    batch = {"tokens": jnp.asarray(np.asarray(tokens)[None, :]),
+             "labels": jnp.zeros((1, len(tokens)), jnp.int32)}
+    toks = engine.generate(params, batch, n_new, jax.random.PRNGKey(1),
+                           temperature=0.0)
+    return np.asarray(toks)[0].tolist()
+
+
+def prompt_of(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# SamplingParams / EngineConfig validation
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_validation_and_stop_set():
+    sp = SamplingParams(stop_token_ids=(3, 5), eos_token_id=9)
+    assert sp.stop_set == {3, 5, 9}
+    assert SamplingParams().stop_set == frozenset()
+    with pytest.raises(ValueError, match="max_new"):
+        SamplingParams(max_new=0)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(n_slots=0), "n_slots"),
+    (dict(cache_len=1), "cache_len"),
+    (dict(paged=True, page_block=0), "page_block"),
+    (dict(pool_blocks=8), "pool_blocks"),
+    (dict(paged=True, pool_blocks=1), "scratch block"),
+    (dict(chunked_prefill=True, chunk=0), "chunk"),
+    (dict(token_budget=-1), "token_budget"),
+    (dict(paged=True, chunked_prefill=True, token_budget=32),
+     None),                               # valid: no raise
+    (dict(token_budget=32), "chunked_prefill"),
+    (dict(prefix_cache=True), "chunked prefill"),
+    (dict(paged=True, prefix_cache=True), "chunked prefill"),
+    (dict(strategy="both"), "strategy"),
+])
+def test_engine_config_flag_matrix(kwargs, match):
+    cfg = EngineConfig(**kwargs)
+    if match is None:
+        cfg.validate()
+    else:
+        with pytest.raises(ValueError, match=match):
+            cfg.validate()
+
+
+def test_engine_config_model_checks(dense_setup):
+    """The model-dependent fences (formerly _validate_chunked and the
+    _SlotTable constructor) live in the same validate()."""
+    cfg, model, _ = dense_setup
+    # attention families must page their chunked-prefill writes
+    with pytest.raises(ValueError, match="paged pool"):
+        EngineConfig(chunked_prefill=True, chunk=8).validate(model)
+    # recurrent chunk misalignment
+    zcfg = get_smoke_config("zamba2_2_7b").reduced(vocab=64)
+    with pytest.raises(ValueError, match="chunkwise-scan"):
+        EngineConfig(paged=True, page_block=8, chunked_prefill=True,
+                     chunk=6).validate(build_model(zcfg))
+    # sliding-window rings can't chunk yet
+    wcfg = get_smoke_config("qwen3_8b").reduced(vocab=64, sliding_window=8)
+    with pytest.raises(ValueError, match="sliding-window"):
+        EngineConfig(paged=True, page_block=4, chunked_prefill=True,
+                     chunk=4).validate(build_model(wcfg))
+    # config-only checks pass without a model; full check passes with one
+    good = EngineConfig(paged=True, page_block=8, chunked_prefill=True,
+                        chunk=8, prefix_cache=True)
+    good.validate()
+    good.validate(model)
+
+
+def test_make_engine_builds_the_right_engine(dense_setup):
+    cfg, model, params = dense_setup
+    ecfg = EngineConfig(n_slots=2, cache_len=CACHE_LEN)
+    eng = make_engine(model, params, config=ecfg)
+    assert isinstance(eng, SlotServer) and eng.config is ecfg
+
+    experts = [params, params]
+    router = CentroidRouter(
+        jnp.asarray(np.eye(2, 16, dtype=np.float32)), RouterConfig())
+    top1 = make_engine(model, experts=experts, router=router, config=ecfg)
+    assert isinstance(top1, DecentralizedSlotServer)
+    assert top1.strategy == "top1" and len(top1.pods) == 2
+    mix = make_engine(model, experts=experts, router=router,
+                      config=EngineConfig(n_slots=2, cache_len=CACHE_LEN,
+                                          strategy="mixture"))
+    assert isinstance(mix.core, MixtureSlotServer)
+
+    with pytest.raises(ValueError, match="router"):
+        make_engine(model, experts=experts, config=ecfg)
+    with pytest.raises(ValueError, match="params"):
+        make_engine(model, config=ecfg)
+
+
+# ---------------------------------------------------------------------------
+# Stop-token / eos termination
+# ---------------------------------------------------------------------------
+
+def test_stop_token_retires_early_and_frees_blocks(dense_setup):
+    """Regression: requests used to always decode exactly max_new tokens.
+    A generated stop id must retire the request right there (the stop
+    token stays in the output), with finish_reason='stop' and its pool
+    blocks returned."""
+    cfg, model, params = dense_setup
+    prompt = prompt_of(cfg, 9, seed=3)
+    ref = ref_greedy(model, params, prompt, 12)
+    stop = ref[3]
+    want = ref[:ref.index(stop) + 1]          # up to AND including the stop
+
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN,
+                     page_block=8)
+    free0 = srv.allocator.n_free
+    rid = srv.add_request(prompt, SamplingParams(max_new=12,
+                                                 stop_token_ids=(stop,)))
+    outs = []
+    while srv.has_unfinished():
+        outs += [o for o in srv.step() if o.finished]
+    assert len(outs) == 1 and outs[0].rid == rid
+    assert outs[0].token_ids == want
+    assert outs[0].finish_reason == "stop"
+    assert srv.allocator.n_free == free0      # blocks returned
+    st = srv.stats()
+    assert st["stopped"] == 1 and st["aborted"] == 0
+
+    # eos_token_id is folded into the same stop set
+    got = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN).serve(
+        [Request(0, prompt, 12,
+                 params=SamplingParams(max_new=12, eos_token_id=stop))])
+    assert got[0] == want
+
+    # a stop id occurring in the PROMPT never triggers (output only)
+    absent = next(t for t in range(cfg.vocab) if t not in ref)
+    with_stop_in_prompt = np.concatenate(
+        [prompt[:-1], np.asarray([absent], np.int32)])
+    n = len(SlotServer(model, params, n_slots=1, cache_len=CACHE_LEN).serve(
+        [Request(0, with_stop_in_prompt, 6,
+                 params=SamplingParams(max_new=6,
+                                       stop_token_ids=(absent,)))])[0])
+    assert n == 6                              # full budget: never stopped
+
+
+def test_first_token_stop_monolithic_and_chunked(dense_setup):
+    """A stop id as the very first (prefill) token retires at admission /
+    prefill completion with a single-token output."""
+    cfg, model, params = dense_setup
+    prompt = prompt_of(cfg, 16, seed=4)
+    first = ref_greedy(model, params, prompt, 1)[0]
+    sp = SamplingParams(max_new=8, stop_token_ids=(first,))
+    for kw in (dict(), dict(page_block=8, chunk=8)):
+        srv = SlotServer(model, params, n_slots=1, cache_len=CACHE_LEN,
+                         **kw)
+        got = srv.serve([Request(0, prompt, 8, params=sp)])
+        assert got[0] == [first]
+        assert srv.n_stopped == 1 and srv.active == []
+
+
+def test_stop_tail_never_enters_prefix_cache(dense_setup):
+    """Regression: only the PROMPT's full blocks are inserted into the
+    prefix cache — a stop-retired request's decode tail must not be
+    shareable, while its prompt still is."""
+    cfg, model, params = dense_setup
+    prompt = prompt_of(cfg, 16, seed=5)       # exactly 2 full blocks
+    ref = ref_greedy(model, params, prompt, 10)
+    stop = ref[2]
+    want = ref[:ref.index(stop) + 1]
+
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN,
+                     page_block=8, chunk=8, prefix_cache=True)
+    got = srv.serve([Request(0, prompt, 10,
+                             params=SamplingParams(max_new=10,
+                                                   stop_token_ids=(stop,)))])
+    assert got[0] == want
+    st = srv.stats()
+    # the prompt's 2 full blocks and nothing else — no post-stop tail
+    assert st["prefix_cached_blocks"] == len(prompt) // 8
+    assert st["pool_free_blocks"] == st["pool_blocks"] - 1 - \
+        st["prefix_cached_blocks"]
+    # an identical prompt reuses the cached prefix and agrees exactly
+    got2 = srv.serve([Request(1, prompt, 10,
+                              params=SamplingParams(
+                                  max_new=10, stop_token_ids=(stop,)))])
+    assert got2[1] == want
+    assert srv.stats()["prefix_skipped_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Abort: queued / mid-prefill / mid-decode resource accounting
+# ---------------------------------------------------------------------------
+
+def test_abort_mid_decode_frees_exactly_the_reserved_blocks(dense_setup):
+    cfg, model, params = dense_setup
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN,
+                     page_block=8)
+    free0 = srv.allocator.n_free
+    p0, p1 = prompt_of(cfg, 10, seed=6), prompt_of(cfg, 7, seed=7)
+    r0 = srv.add_request(p0, SamplingParams(max_new=20))
+    r1 = srv.add_request(p1, SamplingParams(max_new=20))
+    srv.step(), srv.step()                    # both admitted and decoding
+    assert len(srv.decoding) == 2
+
+    slot1 = next(s for s, r in enumerate(srv.slot_req) if r.rid == r1)
+    held1 = int(srv.n_alloc[slot1])
+    out = srv.abort(r0)
+    assert isinstance(out, RequestOutput) and out.finished
+    assert out.finish_reason == "aborted" and out.rid == r0
+    # the pool holds exactly the survivor's blocks again
+    assert srv.allocator.n_free == free0 - held1
+    assert srv.abort(r0) is None              # already finished: no-op
+    assert srv.abort(12345) is None           # unknown rid: no-op
+    assert srv.stats()["aborted"] == 1
+
+    # the survivor is unperturbed: exact greedy parity
+    done = {}
+    while srv.has_unfinished():
+        for o in srv.step():
+            if o.finished:
+                done[o.rid] = o.token_ids
+    assert done[r1] == ref_greedy(model, params, p1, 20)
+    assert srv.allocator.n_free == free0      # full round-trip
+
+
+def test_abort_mid_prefill_frees_blocks(dense_setup):
+    cfg, model, params = dense_setup
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN,
+                     page_block=8, chunk=8)
+    free0 = srv.allocator.n_free
+    rid = srv.add_request(prompt_of(cfg, 24, seed=8),
+                          SamplingParams(max_new=4))
+    srv.step()                                # one chunk of three consumed
+    slot = next(s for s, r in enumerate(srv.slot_req) if r is not None)
+    assert srv.prefilling[slot] and srv.allocator.n_free < free0
+    out = srv.abort(rid)
+    assert out.finished and out.finish_reason == "aborted"
+    assert srv.allocator.n_free == free0      # whole reservation returned
+    assert not any(srv.prefilling) and srv.prefill_order == []
+    assert not srv.has_unfinished() and srv.step() == []
+
+
+def test_abort_waiting_request_never_admits(dense_setup):
+    cfg, model, params = dense_setup
+    srv = SlotServer(model, params, n_slots=1, cache_len=CACHE_LEN)
+    p0 = prompt_of(cfg, 8, seed=9)
+    r0 = srv.add_request(p0, SamplingParams(max_new=6))
+    r1 = srv.add_request(prompt_of(cfg, 8, seed=10),
+                         SamplingParams(max_new=6))
+    srv.step()                                # r0 takes the only slot
+    assert [r.rid for r in srv.waiting] == [r1]
+    out = srv.abort(r1)
+    assert out.finish_reason == "aborted" and out.token_ids == []
+    assert srv.waiting == []
+    done = {}
+    while srv.has_unfinished():
+        for o in srv.step():
+            if o.finished:
+                done[o.rid] = o.token_ids
+    assert done[r0] == ref_greedy(model, params, p0, 6)
+
+
+def test_abort_decrements_prefix_refcounts(dense_setup):
+    """Aborting a request that mapped shared cached blocks mid-prefill
+    releases its references (blocks stay cached for others) and returns
+    only its private blocks to the pool."""
+    cfg, model, params = dense_setup
+    prompt = prompt_of(cfg, 24, seed=11)      # 3 full blocks at block 8
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN,
+                     page_block=8, chunk=4, prefix_cache=True)
+    srv.serve([Request(0, prompt, 3)])        # warm the cache
+    st0 = srv.stats()
+    evict0, free0 = st0["prefix_evictable_blocks"], st0["pool_free_blocks"]
+    assert st0["prefix_cached_blocks"] == 3 and evict0 == 3
+
+    rid = srv.add_request(prompt, SamplingParams(max_new=3))
+    srv.step()                                # matched 2 blocks, chunking
+    slot = next(s for s, r in enumerate(srv.slot_req) if r is not None)
+    assert srv.prefilling[slot]
+    st = srv.stats()
+    assert st["prefix_evictable_blocks"] == evict0 - 2   # 2 acquired
+    assert st["pool_free_blocks"] == free0 - 1           # 1 private block
+
+    srv.abort(rid)
+    st = srv.stats()
+    assert st["prefix_evictable_blocks"] == evict0       # refs released
+    assert st["pool_free_blocks"] == free0               # private returned
+    assert st["prefix_cached_blocks"] == 3               # cache intact
+
+
+# ---------------------------------------------------------------------------
+# Streaming: per-token deltas, timestamps, drain-loop parity
+# ---------------------------------------------------------------------------
+
+def test_streaming_deltas_reassemble_and_stamp(dense_setup):
+    cfg, model, params = dense_setup
+    prompts = [prompt_of(cfg, n, seed=20 + n) for n in (7, 12, 5)]
+    budgets = [6, 4, 8]
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN)
+    for p, m in zip(prompts, budgets):
+        srv.add_request(p, SamplingParams(max_new=m))
+    streamed = {rid: [] for rid in range(3)}
+    stamps = {rid: [] for rid in range(3)}
+    final = {}
+    while srv.has_unfinished():
+        for o in srv.step():
+            assert [d.index for d in o.deltas] == \
+                list(range(len(streamed[o.rid]),
+                           len(streamed[o.rid]) + len(o.deltas)))
+            streamed[o.rid] += [d.token for d in o.deltas]
+            stamps[o.rid] += [d.t for d in o.deltas]
+            if o.finished:
+                final[o.rid] = o
+
+    for rid, (p, m) in enumerate(zip(prompts, budgets)):
+        o = final[rid]
+        assert streamed[rid] == o.token_ids == ref_greedy(model, params,
+                                                          p, m)
+        assert o.finish_reason == "length" and not o.deltas == []
+        assert o.ttft > 0 and o.t_done >= o.t_first >= o.t_submit
+        assert stamps[rid] == sorted(stamps[rid])        # monotone ITL
+
+
+def test_serve_wrapper_logs_finish_reasons(dense_setup, caplog):
+    cfg, model, params = dense_setup
+    srv = SlotServer(model, params, n_slots=2, cache_len=CACHE_LEN)
+    with caplog.at_level(logging.INFO, logger="repro.serve.scheduler"):
+        srv.serve([Request(0, prompt_of(cfg, 6, seed=30), 3)])
+    msg = "".join(r.getMessage() for r in caplog.records)
+    assert "finish_reasons" in msg and "length" in msg
+
+
+# ---------------------------------------------------------------------------
+# The interleaved add/stream/abort scenario on all three engines
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trio_setup(dense_setup):
+    cfg, model, params = dense_setup
+    K, Df = 2, 16
+    experts = [model.init(jax.random.PRNGKey(k)) for k in range(K)]
+    rng = np.random.default_rng(2)
+    router = CentroidRouter(
+        jnp.asarray(rng.normal(size=(K, Df)), jnp.float32),
+        RouterConfig(top_k=K))
+    feats = rng.normal(size=(Df,)).astype(np.float32)   # one shared vector:
+    return cfg, model, params, experts, router, feats   # all → same pod
+
+
+def _trio_engine(which, setup):
+    cfg, model, params, experts, router, feats = setup
+    ecfg = EngineConfig(n_slots=2, cache_len=CACHE_LEN, paged=True,
+                        page_block=8, chunked_prefill=True, chunk=8)
+    if which == "slot":
+        return SlotServer(model, params, config=ecfg)
+    if which == "mixture":
+        return MixtureSlotServer(model, experts, router, config=ecfg)
+    return DecentralizedSlotServer(model, experts, router, config=ecfg)
+
+
+@pytest.mark.parametrize("which", ["slot", "mixture", "decentralized"])
+def test_interleaved_add_stream_abort(which, trio_setup):
+    """Submit, stream, submit more, abort mid-flight — the surviving
+    requests must match a fresh engine serving only them (greedy outputs
+    are schedule-independent), and the accounting must come back clean."""
+    cfg, model, params, experts, router, feats = trio_setup
+    p0, p2 = prompt_of(cfg, 7, seed=40), prompt_of(cfg, 9, seed=41)
+    p1 = prompt_of(cfg, 24, seed=42)          # 3 chunks: aborts mid-prefill
+
+    def req(rid, p, m):
+        return Request(rid, p, m, features=feats,
+                       params=SamplingParams(max_new=m))
+
+    eng = _trio_engine(which, trio_setup)
+    streamed = {}
+
+    def drain_once():
+        for o in eng.step():
+            streamed.setdefault(o.rid, [])
+            streamed[o.rid] += [d.token for d in o.deltas]
+
+    eng.add_request(req(0, p0, 10))
+    drain_once(), drain_once()                # r0 decoding
+    eng.add_request(req(1, p1, 4))            # long prompt → chunked
+    eng.add_request(req(2, p2, 6))            # waits for a slot
+    drain_once()                              # r1 mid-prefill
+    out = eng.abort(1)
+    assert out is not None and out.finish_reason == "aborted"
+    assert eng.abort(1) is None               # no-op on finished
+    while eng.has_unfinished():
+        drain_once()
+    assert not eng.has_unfinished()
+
+    # surviving outputs: exact parity with a fresh engine serving them
+    want = _trio_engine(which, trio_setup).serve(
+        [req(0, p0, 10), req(2, p2, 6)])
+    assert streamed[0] == want[0] and streamed[2] == want[2]
+
+    stats = eng.occupancy() if which == "decentralized" else [eng.stats()]
+    assert sum(s["aborted"] for s in stats) == 1
+    assert all(s["active"] == 0 and s["waiting"] == 0 for s in stats)
+    # every pool block came home
+    assert all(s["pool_free_blocks"] == s["pool_blocks"] - 1
+               for s in stats)
+
+
+def test_decentralized_add_request_requires_features(trio_setup):
+    cfg, model, params, experts, router, feats = trio_setup
+    eng = DecentralizedSlotServer(
+        model, experts, router,
+        config=EngineConfig(n_slots=2, cache_len=CACHE_LEN))
+    with pytest.raises(ValueError, match="features"):
+        eng.add_request(prompt_of(cfg, 6, seed=50), SamplingParams())
+    mix = MixtureSlotServer(
+        model, experts, router,
+        config=EngineConfig(n_slots=2, cache_len=CACHE_LEN))
+    with pytest.raises(ValueError, match="features"):
+        mix.add_request(prompt_of(cfg, 6, seed=51), SamplingParams())

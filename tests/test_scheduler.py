@@ -122,7 +122,9 @@ def test_slot_reuse_and_occupancy():
     assert len(out) == 7
     assert all(len(v) == 3 for v in out.values())
     assert server.active == []            # all slots freed
-    assert server.stats() == {"active": 0}   # contiguous: no pool counters
+    # contiguous: no pool counters; nothing aborted or stop-retired
+    assert server.stats() == {"active": 0, "waiting": 0, "aborted": 0,
+                              "stopped": 0}
 
 
 def test_stats_report_pool_and_prefix_counters():
