@@ -31,14 +31,32 @@ import sys
 # the allowed relative drop (for higher-is-better) / rise (for lower) vs
 # the committed baseline. Both must hold.
 GATED = {
+    # re-calibrated when the bench's rep statistic was fixed to report one
+    # self-consistent (looped, stacked, ratio) triple: the old number
+    # paired a median ratio with best-of-rep raws and overstated the CPU
+    # ratio. On CPU the K looped dispatches overlap via async dispatch, so
+    # the honest smoke ratio sits near 0.75 — the floor only guards the
+    # stacked path against collapsing (the structural win is on the mesh,
+    # where looped pays K sequential per-token dispatches)
     ("serve_mixture", "stacked_over_looped"): {
-        "higher_is_better": True, "rel_tol": 0.35, "floor": 0.85},
+        "higher_is_better": True, "rel_tol": 0.35, "floor": 0.65},
+    # raised from 0.60 once the fused single-dispatch step + live-horizon
+    # table truncation closed (then inverted) the paging gap: the paged
+    # server now attends only written blocks while the fixed-row server
+    # attends the whole provisioned context, so it wins outright (~1.3x
+    # on the committed machine); 0.95 keeps "no slower than contiguous"
+    # as the hard claim with margin for shared-machine noise
     ("serve_paged", "paged_over_contiguous"): {
-        "higher_is_better": True, "rel_tol": 0.35, "floor": 0.60},
+        "higher_is_better": True, "rel_tol": 0.35, "floor": 0.95},
     ("serve_paged", "kv_memory_ratio"): {
         "higher_is_better": False, "rel_tol": 0.0},   # layout fact: exact
+    # lowered from 1.30 when admission cache splices were jitted: the
+    # stop-the-world prefill the chunked path amortizes got ~10x cheaper
+    # to insert, so the monolithic baseline is honestly faster and the
+    # chunked win over it is structurally smaller at smoke shapes. The
+    # floor still asserts chunked admission WINS under burst load
     ("serve_chunked", "chunked_over_monolithic"): {
-        "higher_is_better": True, "rel_tol": 0.35, "floor": 1.30},
+        "higher_is_better": True, "rel_tol": 0.35, "floor": 1.05},
     # TTFT ratio of two small wall-clock means: noisier than the
     # throughput ratios, so the band is wide enough that the 1.3x claim
     # floor (not the committed machine's ~3.2x) is the binding bound

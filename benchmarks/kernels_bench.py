@@ -68,6 +68,38 @@ def run(_settings=None):
                                ref.chunk_scan_ref(a, b, c_, d)),
                        qc, qc, vc, cum), "xla_cpu"))
 
+    # paged decode: page-size x blocks-per-step sweep over one 128-position
+    # logical span. bps > 1 folds several logical blocks into one grid
+    # step (fewer grid steps, same DMA volume — past-horizon sub-tiles
+    # clamp to a revisited index and skip their copy); every timed config
+    # is first checked against the jnp oracle so the sweep can't quietly
+    # drift from the definition.
+    B, H, KV, dh, span = 4, 4, 2, 32, 128
+    kp = jax.random.split(key, 3)
+    qp = jax.random.normal(kp[0], (B, H, dh), jnp.float32)
+    ppos = jnp.asarray([span - 1, span // 2, 7, 0][:B])
+    for block in (8, 16, 32):
+        NB = span // block
+        P = B * NB + 2
+        kpool = jax.random.normal(kp[1], (P, block, KV, dh), jnp.float32)
+        vpool = jax.random.normal(kp[2], (P, block, KV, dh), jnp.float32)
+        bt = jnp.arange(1, B * NB + 1, dtype=jnp.int32).reshape(B, NB)
+        oracle = ref.paged_decode_attention_ref(qp, kpool, vpool, ppos, bt)
+        for bps in (1, 2, 4):
+            got = ops.paged_decode_attention(qp, kpool, vpool, ppos, bt,
+                                             blocks_per_step=bps)
+            assert jnp.allclose(got, oracle, atol=1e-5), (block, bps)
+            rows.append((f"paged_decode_b{block}_bps{bps}_pallas",
+                         _time(lambda a, b_, c_, p, t, n=bps:
+                               ops.paged_decode_attention(
+                                   a, b_, c_, p, t, blocks_per_step=n),
+                               qp, kpool, vpool, ppos, bt), "interpret"))
+        rows.append((f"paged_decode_b{block}_ref",
+                     _time(jax.jit(lambda a, b_, c_, p, t:
+                                   ref.paged_decode_attention_ref(
+                                       a, b_, c_, p, t)),
+                           qp, kpool, vpool, ppos, bt), "xla_cpu"))
+
     print("\n== Kernel microbenchmarks (CPU; kernels in interpret mode) ==")
     print("name,us_per_call,derived")
     for name, us, tag in rows:

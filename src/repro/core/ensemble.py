@@ -206,6 +206,80 @@ def make_stacked_chunk_fns(model, stacked, param_axes, cache_len: int,
     return jax.jit(prep_all), chunk_all
 
 
+def make_stacked_fused(model, param_axes, cache_len: int, *,
+                       chunk_all=None, use_kernel: bool = False,
+                       paged: bool = False):
+    """Fused-step companions to ``make_stacked_serving``: the vmapped
+    Eq. 27 mixture decode PLUS the serving epilogue (seeded sampling, stop
+    ids, budget/context checks, position advance — ``from_probs``: the
+    mixed scores are probabilities) in one jitted dispatch, so a mixture
+    decode token costs a single kernel launch like the single-model path.
+
+    Returns ``(step, step_chunk, chunk_only)``:
+
+    * ``step(stacked, caches, state)`` → ``(caches, state, next_tok,
+      done)`` — ``state`` is the scheduler's per-slot device-state dict
+      (``state["weights"]`` carries the (n_slots, K) router weights,
+      ``state["tables"]`` the block tables when paged);
+    * ``step_chunk(stacked, caches, state, carry, xc, start, length, cbt,
+      w_row, temp, top_k, seed)`` → additionally consumes one prefill
+      chunk and returns its (fused, device-side) first-token pick;
+    * ``chunk_only(...)`` — the chunk + pick without a decode.
+
+    ``step_chunk``/``chunk_only`` are None without ``chunk_all`` (pass the
+    un-jitted chunk fn from ``make_stacked_chunk_fns``).
+    """
+    # function-level import: serve.fused imports PROB_FLOOR from here
+    from repro.serve.fused import decode_epilogue, pick_first
+    cache_axes = stacked_cache_axes(model.cache_shapes(1, cache_len))
+
+    if paged:
+        def mix(stacked_p, caches, st):
+            logits, caches = jax.vmap(
+                lambda p, c: model.decode_step_paged(
+                    p, c, st["tok"], st["pos"], st["tables"],
+                    use_kernel=use_kernel),
+                in_axes=(param_axes, cache_axes),
+                out_axes=(0, cache_axes))(stacked_p, caches)
+            return mix_expert_logits(logits, st["weights"]), caches
+    else:
+        def mix(stacked_p, caches, st):
+            logits, caches = jax.vmap(
+                lambda p, c: model.decode_step(p, c, st["tok"], st["pos"],
+                                               use_kernel=use_kernel),
+                in_axes=(param_axes, cache_axes),
+                out_axes=(0, cache_axes))(stacked_p, caches)
+            return mix_expert_logits(logits, st["weights"]), caches
+
+    def step(stacked_p, caches, st):
+        probs, caches = mix(stacked_p, caches, st)
+        st, nxt, done = decode_epilogue(probs, st, cache_len=cache_len,
+                                        from_probs=True)
+        return caches, st, nxt, done
+
+    if chunk_all is None:
+        return jax.jit(step), None, None
+
+    def step_chunk(stacked_p, caches, st, carry, xc, start, length, cbt,
+                   w_row, temp, top_k, seed):
+        probs, caches = mix(stacked_p, caches, st)
+        c_probs, carry, caches = chunk_all(stacked_p, caches, carry, xc,
+                                           start, length, cbt, w_row)
+        st, nxt, done = decode_epilogue(probs, st, cache_len=cache_len,
+                                        from_probs=True)
+        first = pick_first(c_probs, temp, top_k, seed, from_probs=True)
+        return caches, st, nxt, done, first, carry
+
+    def chunk_only(stacked_p, caches, carry, xc, start, length, cbt,
+                   w_row, temp, top_k, seed):
+        c_probs, carry, caches = chunk_all(stacked_p, caches, carry, xc,
+                                           start, length, cbt, w_row)
+        first = pick_first(c_probs, temp, top_k, seed, from_probs=True)
+        return first, carry, caches
+
+    return jax.jit(step), jax.jit(step_chunk), jax.jit(chunk_only)
+
+
 def select_expert_params(stacked_params, expert_idx: Array):
     """Top-1 fast path: gather one expert's parameter slice out of a pytree
     whose leaves carry a leading K dim. With the expert axis sharded over the

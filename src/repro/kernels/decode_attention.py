@@ -124,88 +124,114 @@ def decode_attention(q: Array, k: Array, v: Array, pos: Array, *,
     return out.reshape(B, H, dh)
 
 
-def _paged_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *,
-                         scale: float, block: int, window: int, s_log: int):
+def _paged_decode_kernel(pos_ref, bt_ref, q_ref, *refs,
+                         scale: float, block: int, window: int, s_log: int,
+                         bps: int, nb: int):
     """Same online-softmax body as ``_decode_kernel``; the physical-block
-    indirection already happened in the index maps, so ``ki`` here is the
-    LOGICAL block index and the masking rules are unchanged."""
-    b = pl.program_id(0)
-    ki = pl.program_id(2)
-    nk = pl.num_programs(2)
+    indirection already happened in the index maps, so the logical block
+    index ``ki`` drives the masking rules unchanged.
 
-    @pl.when(ki == 0)
+    One grid step processes ``bps`` logical blocks: the j-th sub-tile is a
+    separate kernel operand whose index map fetched logical block
+    ``kc·bps + j`` — clamped to the slot's horizon block ``pos // block``
+    (windowless caches), so past-the-horizon sub-tiles re-fetch the
+    horizon block and the revisit rule elides their DMAs entirely; the
+    body then skips them via ``live``. Sub-tiles accumulate in ascending
+    ``ki`` order, so the m/l/acc recurrence is bit-identical to bps=1.
+    """
+    k_refs, v_refs = refs[:bps], refs[bps:2 * bps]
+    o_ref = refs[2 * bps]
+    m_scr, l_scr, acc_scr = refs[2 * bps + 1:]
+    b = pl.program_id(0)
+    kc = pl.program_id(2)
+    nkc = pl.num_programs(2)
+
+    @pl.when(kc == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     pos = pos_ref[b]
-    # a logical block is dead when every one of its positions is masked;
-    # skipping it saves the two MXU dots (the DMA was already issued, but
-    # unallocated entries alias the scratch block, which is cheap to fetch).
-    live = (ki * block <= pos) if window <= 0 \
-        else ((ki * block <= pos) | (pos >= s_log))
+    for j in range(bps):
+        ki = kc * bps + j
+        # a logical block is dead when every one of its positions is
+        # masked; skipping it saves the two MXU dots (and, clamped, its
+        # DMA). The ``ki < nb`` guard kills the padded tail when bps does
+        # not divide nb (its clamped fetch aliases a live block).
+        live = ((ki * block <= pos) if window <= 0
+                else ((ki * block <= pos) | (pos >= s_log))) & (ki < nb)
 
-    @pl.when(live)
-    def _accum():
-        _accum_block(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
-                     scale=scale, block=block, ki=ki, pos=pos,
-                     window=window, s_cache=s_log)
+        @pl.when(live)
+        def _accum(j=j, ki=ki):
+            _accum_block(q_ref, k_refs[j], v_refs[j], m_scr, l_scr,
+                         acc_scr, scale=scale, block=block, ki=ki, pos=pos,
+                         window=window, s_cache=s_log)
 
-    @pl.when(ki == nk - 1)
+    @pl.when(kc == nkc - 1)
     def _done():
         o_ref[0, 0, :, :] = (acc_scr[...] /
                              jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _chunk_prefill_kernel(start_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                          m_scr, l_scr, acc_scr, *,
-                          scale: float, block: int, group: int, C: int):
+def _chunk_prefill_kernel(start_ref, bt_ref, q_ref, *refs,
+                          scale: float, block: int, group: int, C: int,
+                          bps: int, nb: int):
     """Prefix-aware chunked-prefill flash attention over PAGED blocks.
 
     Rows are the chunk's (c, group) query pairs flattened c-major; row r is
     the query at absolute position ``start + r // group``. ``ki`` is the
     LOGICAL block index — the physical indirection already happened in the
     index maps (scalar-prefetched block table), exactly like the paged
-    decode kernel. The chunk's own K/V were scattered into the pool before
-    the call, so the single fence ``key position ≤ query position`` covers
-    both the prefix and within-chunk causality.
+    decode kernel, with the same ``blocks_per_step`` sub-tiling (the
+    horizon here is the last query position's block). The chunk's own K/V
+    were scattered into the pool before the call, so the single fence
+    ``key position ≤ query position`` covers both the prefix and
+    within-chunk causality.
     """
-    ki = pl.program_id(1)
-    nk = pl.num_programs(1)
+    k_refs, v_refs = refs[:bps], refs[bps:2 * bps]
+    o_ref = refs[2 * bps]
+    m_scr, l_scr, acc_scr = refs[2 * bps + 1:]
+    kc = pl.program_id(1)
+    nkc = pl.num_programs(1)
 
-    @pl.when(ki == 0)
+    @pl.when(kc == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     start = start_ref[0]
-    # blocks entirely above the last query position are dead for every row
-    live = ki * block <= start + (C - 1)
+    for j in range(bps):
+        ki = kc * bps + j
+        # blocks entirely above the last query position are dead for
+        # every row; the ``ki < nb`` guard kills the padded tail
+        live = (ki * block <= start + (C - 1)) & (ki < nb)
 
-    @pl.when(live)
-    def _accum():
-        q = q_ref[0, :, :].astype(jnp.float32)         # (C·group, dh)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (block, dh)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
-        cols = ki * block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(cols <= start + rows, s, NEG_INF)
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        @pl.when(live)
+        def _accum(j=j, ki=ki):
+            q = q_ref[0, :, :].astype(jnp.float32)       # (C·group, dh)
+            k = k_refs[j][0, :, 0, :].astype(jnp.float32)  # (block, dh)
+            v = v_refs[j][0, :, 0, :].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+            cols = ki * block + \
+                jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= start + rows, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_scr[...] = alpha * l_scr[...] + \
+                jnp.sum(p, axis=-1, keepdims=True)
+            acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
 
-    @pl.when(ki == nk - 1)
+    @pl.when(kc == nkc - 1)
     def _done():
         o_ref[0, :, :] = (acc_scr[...] /
                           jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
@@ -213,16 +239,22 @@ def _chunk_prefill_kernel(start_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
 
 def chunk_prefill_attention(q: Array, k_pool: Array, v_pool: Array,
                             start: Array, block_table: Array, *,
+                            blocks_per_step: int = 1,
                             interpret: bool = False) -> Array:
     """q: (C,H,dh) one request's chunk queries; k_pool,v_pool:
     (P,block,KV,dh) with the chunk's K/V already scattered in; start: ()
     int32 absolute position of chunk row 0; block_table: (NB,) int32 →
     (C,H,dh).
 
-    Grid = (kv_heads, NB logical blocks); ``start`` and the block table are
-    scalar-prefetch operands so the K/V index maps resolve the physical
-    block at DMA-issue time. Unallocated entries alias scratch block 0 and
-    are killed by the position fence.
+    Grid = (kv_heads, ⌈NB / blocks_per_step⌉ logical-block groups);
+    ``start`` and the block table are scalar-prefetch operands so the K/V
+    index maps resolve the physical block at DMA-issue time. As in
+    ``paged_decode_attention``, each of the ``blocks_per_step`` sub-tiles
+    is its own operand whose index map clamps the fetched logical index to
+    the chunk's horizon block ``(start + C - 1) // block`` — dead blocks
+    alias the horizon block and the DMA revisit rule elides the fetch.
+    Unallocated entries alias scratch block 0 and are killed by the
+    position fence.
     """
     C, H, dh = q.shape
     block, KV = k_pool.shape[1], k_pool.shape[2]
@@ -230,27 +262,34 @@ def chunk_prefill_attention(q: Array, k_pool: Array, v_pool: Array,
     assert H % KV == 0
     group = H // KV
     scale = 1.0 / (dh ** 0.5)
+    bps = max(1, min(blocks_per_step, NB))
+    nkc = -(-NB // bps)
     # rows flattened c-major per KV head: (KV, C·group, dh)
     qg = jnp.transpose(q.reshape(C, KV, group, dh), (1, 0, 2, 3)) \
         .reshape(KV, C * group, dh)
 
+    def kv_spec(j):
+        def imap(h, kc, start_r, bt_r):
+            ki = jnp.minimum(jnp.minimum(kc * bps + j,
+                                         (start_r[0] + C - 1) // block),
+                             NB - 1)
+            return (bt_r[ki], 0, h, 0)
+        return pl.BlockSpec((1, block, 1, dh), imap)
+
     kernel = functools.partial(_chunk_prefill_kernel, scale=scale,
-                               block=block, group=group, C=C)
+                               block=block, group=group, C=C,
+                               bps=bps, nb=NB)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                        # start, block_table
-        grid=(KV, NB),
+        grid=(KV, nkc),
         in_specs=[
             pl.BlockSpec((1, C * group, dh),
-                         lambda h, ki, start_r, bt_r: (h, 0, 0)),       # q
-            pl.BlockSpec((1, block, 1, dh),
-                         lambda h, ki, start_r, bt_r:
-                         (bt_r[ki], 0, h, 0)),                          # k
-            pl.BlockSpec((1, block, 1, dh),
-                         lambda h, ki, start_r, bt_r:
-                         (bt_r[ki], 0, h, 0)),                          # v
+                         lambda h, kc, start_r, bt_r: (h, 0, 0)),       # q
+            *[kv_spec(j) for j in range(bps)],                          # k
+            *[kv_spec(j) for j in range(bps)],                          # v
         ],
         out_specs=pl.BlockSpec((1, C * group, dh),
-                               lambda h, ki, start_r, bt_r: (h, 0, 0)),
+                               lambda h, kc, start_r, bt_r: (h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((C * group, 1), jnp.float32),
             pltpu.VMEM((C * group, 1), jnp.float32),
@@ -263,23 +302,31 @@ def chunk_prefill_attention(q: Array, k_pool: Array, v_pool: Array,
         out_shape=jax.ShapeDtypeStruct((KV, C * group, dh), q.dtype),
         interpret=interpret,
     )(jnp.asarray(start, jnp.int32).reshape(1),
-      block_table.astype(jnp.int32), qg, k_pool, v_pool)
+      block_table.astype(jnp.int32), qg,
+      *([k_pool] * bps), *([v_pool] * bps))
     return jnp.transpose(out.reshape(KV, C, group, dh),
                          (1, 0, 2, 3)).reshape(C, H, dh)
 
 
 def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
                            pos: Array, block_tables: Array, *,
-                           window: int = 0,
+                           window: int = 0, blocks_per_step: int = 1,
                            interpret: bool = False) -> Array:
     """q: (B,H,dh); k_pool,v_pool: (P,block,KV,dh); pos: (B,) int32;
     block_tables: (B,NB) int32 → (B,H,dh).
 
-    Grid = (batch, kv_heads, NB logical blocks). ``pos`` and the block
-    table are scalar-prefetch operands: the K/V index maps pick physical
-    block ``block_tables[b, ki]`` out of the pool, so the gather happens in
-    the DMA engine, not the kernel body. ``window > 0`` applies the ring
-    validity rule over the slot's logical span NB·block (= the ring size).
+    Grid = (batch, kv_heads, ⌈NB / blocks_per_step⌉). ``pos`` and the
+    block table are scalar-prefetch operands: the K/V index maps pick the
+    physical block out of the pool, so the gather happens in the DMA
+    engine, not the kernel body — amortized over ``blocks_per_step``
+    logical blocks per grid step (each sub-tile is its own operand with
+    its own index map). Windowless maps clamp the fetched logical index to
+    the slot's horizon block ``pos // block``: every past-the-horizon grid
+    step re-fetches the horizon block, which the DMA revisit rule elides —
+    dead blocks cost neither bandwidth nor MXU work, replacing the old
+    fetch-then-mask scheme. ``window > 0`` applies the ring validity rule
+    over the slot's logical span NB·block (= the ring size; the whole ring
+    stays live once wrapped, so only the NB bound is clamped).
     """
     B, H, dh = q.shape
     P, block, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
@@ -287,25 +334,36 @@ def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
     assert H % KV == 0
     group = H // KV
     scale = 1.0 / (dh ** 0.5)
+    bps = max(1, min(blocks_per_step, NB))
+    nkc = -(-NB // bps)
     qg = q.reshape(B, KV, group, dh)
 
+    def kv_spec(j):
+        if window <= 0:
+            def imap(b, h, kc, pos_r, bt_r):
+                ki = jnp.minimum(jnp.minimum(kc * bps + j,
+                                             pos_r[b] // block), NB - 1)
+                return (bt_r[b, ki], 0, h, 0)
+        else:
+            def imap(b, h, kc, pos_r, bt_r):
+                ki = jnp.minimum(kc * bps + j, NB - 1)
+                return (bt_r[b, ki], 0, h, 0)
+        return pl.BlockSpec((1, block, 1, dh), imap)
+
     kernel = functools.partial(_paged_decode_kernel, scale=scale,
-                               block=block, window=window, s_log=NB * block)
+                               block=block, window=window, s_log=NB * block,
+                               bps=bps, nb=NB)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                        # pos, block_tables
-        grid=(B, KV, NB),
+        grid=(B, KV, nkc),
         in_specs=[
             pl.BlockSpec((1, 1, group, dh),
-                         lambda b, h, ki, pos_r, bt_r: (b, h, 0, 0)),  # q
-            pl.BlockSpec((1, block, 1, dh),
-                         lambda b, h, ki, pos_r, bt_r:
-                         (bt_r[b, ki], 0, h, 0)),                      # k
-            pl.BlockSpec((1, block, 1, dh),
-                         lambda b, h, ki, pos_r, bt_r:
-                         (bt_r[b, ki], 0, h, 0)),                      # v
+                         lambda b, h, kc, pos_r, bt_r: (b, h, 0, 0)),  # q
+            *[kv_spec(j) for j in range(bps)],                         # k
+            *[kv_spec(j) for j in range(bps)],                         # v
         ],
         out_specs=pl.BlockSpec((1, 1, group, dh),
-                               lambda b, h, ki, pos_r, bt_r: (b, h, 0, 0)),
+                               lambda b, h, kc, pos_r, bt_r: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, 1), jnp.float32),
@@ -318,5 +376,5 @@ def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
         out_shape=jax.ShapeDtypeStruct((B, KV, group, dh), q.dtype),
         interpret=interpret,
     )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), qg,
-      k_pool, v_pool)
+      *([k_pool] * bps), *([v_pool] * bps))
     return out.reshape(B, H, dh)

@@ -63,18 +63,21 @@ def decode_attention(q, k, v, pos, *, window: int = 0, block_k: int = 256):
                                     block_k=block_k, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "blocks_per_step"))
 def paged_decode_attention(q, k_pool, v_pool, pos, block_tables, *,
-                           window: int = 0):
+                           window: int = 0, blocks_per_step: int = 1):
     return _decode.paged_decode_attention(q, k_pool, v_pool, pos,
                                           block_tables, window=window,
+                                          blocks_per_step=blocks_per_step,
                                           interpret=_interpret())
 
 
-@jax.jit
-def chunk_prefill_attention(q, k_pool, v_pool, start, block_table):
+@functools.partial(jax.jit, static_argnames=("blocks_per_step",))
+def chunk_prefill_attention(q, k_pool, v_pool, start, block_table, *,
+                            blocks_per_step: int = 1):
     return _decode.chunk_prefill_attention(q, k_pool, v_pool, start,
                                            block_table,
+                                           blocks_per_step=blocks_per_step,
                                            interpret=_interpret())
 
 

@@ -97,6 +97,10 @@ def main() -> None:
                     help="drive the incremental add_request/step API and "
                          "print per-token deltas as they decode "
                          "(slot engine)")
+    ap.add_argument("--no-fused-step", action="store_true",
+                    help="run the legacy host epilogue instead of the fused "
+                         "single-dispatch decode step (parity escape hatch; "
+                         "slot engine)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -135,6 +139,7 @@ def main() -> None:
             page_block=args.page_block, pool_blocks=args.pool_blocks,
             chunked_prefill=args.chunked_prefill, chunk=args.prefill_chunk,
             token_budget=args.token_budget, prefix_cache=args.prefix_cache,
+            fused_step=not args.no_fused_step,
             use_kernel=args.use_kernel, strategy=args.strategy)
         ecfg.validate(model)
         server = make_engine(model, experts=experts, router=router,
@@ -199,6 +204,8 @@ def main() -> None:
         "prefix_cache": (args.prefix_cache
                          if args.engine == "slots" else None),
         "pods": server.occupancy() if args.engine == "slots" else None,
+        "fused_step": (not args.no_fused_step
+                       if args.engine == "slots" else None),
         "use_kernel": args.use_kernel,
         "stream": args.stream if args.engine == "slots" else None,
         "wall_s": round(dt, 2),

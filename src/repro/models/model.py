@@ -111,22 +111,36 @@ class CacheSpec:
     def shifted(self, by: int = 1) -> "CacheSpec":
         """Spec for the same cache with ``by`` extra dims inserted before
         every batch axis (e.g. the stacked-expert K dim of the mixture
-        decode core, which sits after each leaf's scan dim)."""
-        paged = self.paged
-        if paged is not None:
-            paged = PagedLayout(paged.block_size,
-                                jax.tree.map(lambda a: a + by if a >= 0
-                                             else a, paged.seq_axes))
-        return CacheSpec(jax.tree.map(lambda a: a + by, self.batch_axes),
-                         paged)
+        decode core, which sits after each leaf's scan dim). Memoized so
+        repeat callers share one spec — and with it the jitted splice
+        functions below (a fresh spec would recompile them)."""
+        memo = self.__dict__.setdefault("_shifted_memo", {})
+        if by not in memo:
+            paged = self.paged
+            if paged is not None:
+                paged = PagedLayout(paged.block_size,
+                                    jax.tree.map(lambda a: a + by if a >= 0
+                                                 else a, paged.seq_axes))
+            memo[by] = CacheSpec(
+                jax.tree.map(lambda a: a + by, self.batch_axes), paged)
+        return memo[by]
 
     def insert(self, cache, row_cache, slot: int):
         """Write a single-request cache (batch extent 1 on each leaf's batch
         axis) into ``cache`` at slot index ``slot``."""
-        return jax.tree.map(
-            lambda full, row, ax: jax.lax.dynamic_update_slice_in_dim(
-                full, row.astype(full.dtype), slot, axis=ax),
-            cache, row_cache, self.batch_axes)
+        return self._insert_jit(cache, row_cache, jnp.int32(slot))
+
+    @cached_property
+    def _insert_jit(self):
+        # one jitted splice for ALL slots (the index is a traced scalar):
+        # per-leaf unjitted updates each dispatch separately and copy the
+        # whole leaf, which shows up as per-admission latency
+        def f(cache, row_cache, slot):
+            return jax.tree.map(
+                lambda full, row, ax: jax.lax.dynamic_update_slice_in_dim(
+                    full, row.astype(full.dtype), slot, axis=ax),
+                cache, row_cache, self.batch_axes)
+        return jax.jit(f)
 
     def insert_paged(self, cache, row_cache, slot: int, blocks: Array):
         """Splice a single-request contiguous prefill cache into the paged
@@ -134,54 +148,77 @@ class CacheSpec:
         cache-row positions into the physical blocks listed in ``blocks``
         (int32 (nb,)); direct leaves behave exactly like ``insert``."""
         assert self.paged is not None, "insert_paged needs a paged spec"
+        return self._insert_paged_jit(cache, row_cache, jnp.int32(slot),
+                                      blocks)
+
+    @cached_property
+    def _insert_paged_jit(self):
         bs = self.paged.block_size
-        nb = blocks.shape[0]
 
-        def one(full, row, b_ax, s_ax):
-            if s_ax < 0:
-                return jax.lax.dynamic_update_slice_in_dim(
-                    full, row.astype(full.dtype), slot, axis=b_ax)
-            # pool leaf: contiguous row is (..., 1, S, ...) with the batch
-            # extent-1 at b_ax and the sequence at s_ax == b_ax + 1; the
-            # pool is (..., P, bs, ...) at the same axis positions.
-            assert s_ax == b_ax + 1, (b_ax, s_ax)
-            row = jnp.squeeze(row, axis=b_ax)          # seq now at b_ax
-            take = min(nb * bs, row.shape[b_ax])
-            row = jax.lax.slice_in_dim(row, 0, take, axis=b_ax)
-            if take < nb * bs:                         # cache_len ∤ block
-                pad = [(0, 0)] * row.ndim
-                pad[b_ax] = (0, nb * bs - take)
-                row = jnp.pad(row, pad)
-            row = row.reshape(row.shape[:b_ax] + (nb, bs)
-                              + row.shape[b_ax + 1:])
-            idx = (slice(None),) * b_ax + (blocks,)
-            return full.at[idx].set(row.astype(full.dtype))
+        # jitted across slots (traced scalar); retraces once per distinct
+        # block-count nb — bounded by the slot's table length
+        def f(cache, row_cache, slot, blocks):
+            nb = blocks.shape[0]
 
-        seq = self.paged.seq_axes
-        return jax.tree.map(one, cache, row_cache, self.batch_axes, seq)
+            def one(full, row, b_ax, s_ax):
+                if s_ax < 0:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        full, row.astype(full.dtype), slot, axis=b_ax)
+                # pool leaf: contiguous row is (..., 1, S, ...) with the
+                # batch extent-1 at b_ax and the sequence at
+                # s_ax == b_ax + 1; the pool is (..., P, bs, ...) at the
+                # same axis positions.
+                assert s_ax == b_ax + 1, (b_ax, s_ax)
+                row = jnp.squeeze(row, axis=b_ax)      # seq now at b_ax
+                take = min(nb * bs, row.shape[b_ax])
+                row = jax.lax.slice_in_dim(row, 0, take, axis=b_ax)
+                if take < nb * bs:                     # cache_len ∤ block
+                    pad = [(0, 0)] * row.ndim
+                    pad[b_ax] = (0, nb * bs - take)
+                    row = jnp.pad(row, pad)
+                row = row.reshape(row.shape[:b_ax] + (nb, bs)
+                                  + row.shape[b_ax + 1:])
+                idx = (slice(None),) * b_ax + (blocks,)
+                return full.at[idx].set(row.astype(full.dtype))
+
+            seq = self.paged.seq_axes
+            return jax.tree.map(one, cache, row_cache, self.batch_axes, seq)
+        return jax.jit(f)
 
     def insert_direct(self, cache, carry, slot: int):
         """Write a chunked-prefill carry (single-request DIRECT-leaf decode
         states; pool-leaf entries are placeholders — their data was written
         straight into the block pool chunk by chunk) into the batched cache
         at ``slot``. Without a paged layout every leaf is direct."""
+        return self._insert_direct_jit(cache, carry, jnp.int32(slot))
+
+    @cached_property
+    def _insert_direct_jit(self):
         seq = self.paged.seq_axes if self.paged is not None else \
             jax.tree.map(lambda _: -1, self.batch_axes)
 
-        def one(full, row, ax, s_ax):
-            if s_ax >= 0:
-                return full
-            return jax.lax.dynamic_update_slice_in_dim(
-                full, row.astype(full.dtype), slot, axis=ax)
+        def f(cache, carry, slot):
+            def one(full, row, ax, s_ax):
+                if s_ax >= 0:
+                    return full
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, row.astype(full.dtype), slot, axis=ax)
 
-        return jax.tree.map(one, cache, carry, self.batch_axes, seq)
+            return jax.tree.map(one, cache, carry, self.batch_axes, seq)
+        return jax.jit(f)
 
     def take(self, cache, slot: int):
         """Read one slot's cache back out (batch extent 1 preserved)."""
-        return jax.tree.map(
-            lambda full, ax: jax.lax.dynamic_slice_in_dim(full, slot, 1,
-                                                          axis=ax),
-            cache, self.batch_axes)
+        return self._take_jit(cache, jnp.int32(slot))
+
+    @cached_property
+    def _take_jit(self):
+        def f(cache, slot):
+            return jax.tree.map(
+                lambda full, ax: jax.lax.dynamic_slice_in_dim(full, slot, 1,
+                                                              axis=ax),
+                cache, self.batch_axes)
+        return jax.jit(f)
 
 
 @dataclass
@@ -453,7 +490,15 @@ class Model:
         attention KV leaves page through a block pool; recurrent states and
         enc-dec cross-attention KV (written once, fixed extent) stay on the
         direct per-slot path (seq axis ``-1``).
+
+        Memoized per ``block_size``: every server built on this model gets
+        the SAME spec object, so the spec's jitted splice functions
+        (``insert``/``insert_paged``/``take``) compile once per model
+        instead of once per server.
         """
+        memo = self.__dict__.setdefault("_cache_spec_memo", {})
+        if block_size in memo:
+            return memo[block_size]
         cfg = self.cfg
         if cfg.family in ("dense", "vlm", "moe"):
             axes = {"k": 1, "v": 1}
@@ -471,7 +516,8 @@ class Model:
         else:
             raise ValueError(cfg.family)
         paged = PagedLayout(block_size, seq) if block_size > 0 else None
-        return CacheSpec(axes, paged)
+        memo[block_size] = CacheSpec(axes, paged)
+        return memo[block_size]
 
     def _paged_cache_struct(self, n_slots: int, n_blocks: int,
                             block_size: int, cache_len: int, as_shape: bool):
@@ -1031,6 +1077,34 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
         return logits[:, 0], new_cache
+
+    def fused_decode_step(self, params, cache, state, *, cache_len: int,
+                          use_kernel: bool = False, paged: bool = False):
+        """One WHOLE decode token as a single traceable computation: the
+        forward (contiguous or paged — ``state["tables"]`` carries the
+        per-slot block tables when paged) followed by the serving epilogue
+        (seeded ``sample_tokens``, stop/eos ids, budget and context-bound
+        checks, position advance) from ``repro.serve.fused``.
+
+        ``state`` is the scheduler's per-slot device-state dict; returns
+        ``(new_cache, new_state, next_tok, done)`` where ``done`` is the
+        per-slot ``DONE_REASONS`` bitmap the host reads back instead of
+        inspecting tokens per slot.
+        """
+        # function-level import: repro.serve pulls in the schedulers, which
+        # import this module — the epilogue itself is a leaf
+        from repro.serve.fused import decode_epilogue
+        if paged:
+            scores, cache = self.decode_step_paged(
+                params, cache, state["tok"], state["pos"], state["tables"],
+                use_kernel=use_kernel)
+        else:
+            scores, cache = self.decode_step(params, cache, state["tok"],
+                                             state["pos"],
+                                             use_kernel=use_kernel)
+        state, nxt, done = decode_epilogue(scores, state,
+                                           cache_len=cache_len)
+        return cache, state, nxt, done
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -2,11 +2,14 @@ from .api import (EngineConfig, RequestOutput, SamplingParams, TokenDelta,
                   FINISH_REASONS)
 from .engine import ServeEngine, serve_step_fn
 from .ensemble_engine import DecentralizedServer
+from .fused import DONE_REASONS, decode_epilogue, pick_first, sample_tokens
 from .prefix_cache import PrefixCache, block_keys
 from .scheduler import (DecentralizedSlotServer, MixtureSlotServer, Request,
                         SlotServer, make_engine)
 
-__all__ = ["DecentralizedServer", "DecentralizedSlotServer", "EngineConfig",
-           "FINISH_REASONS", "MixtureSlotServer", "PrefixCache", "Request",
-           "RequestOutput", "SamplingParams", "ServeEngine", "SlotServer",
-           "TokenDelta", "block_keys", "make_engine", "serve_step_fn"]
+__all__ = ["DONE_REASONS", "DecentralizedServer", "DecentralizedSlotServer",
+           "EngineConfig", "FINISH_REASONS", "MixtureSlotServer",
+           "PrefixCache", "Request", "RequestOutput", "SamplingParams",
+           "ServeEngine", "SlotServer", "TokenDelta", "block_keys",
+           "decode_epilogue", "make_engine", "pick_first", "sample_tokens",
+           "serve_step_fn"]

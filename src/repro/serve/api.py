@@ -38,9 +38,15 @@ from dataclasses import dataclass, field
 from typing import FrozenSet, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 __all__ = ["EngineConfig", "RequestOutput", "SamplingParams", "TokenDelta",
-           "FINISH_REASONS", "effective_page_block"]
+           "FINISH_REASONS", "STOP_PAD", "effective_page_block",
+           "stop_id_row"]
+
+#: Pad value for the device-side per-slot stop-id matrix. Token ids are
+#: non-negative, so pad entries can never match a decoded token.
+STOP_PAD = -1
 
 #: The closed set of reasons a request can finish with.
 #:   length    — decoded its full ``max_new`` budget
@@ -92,6 +98,22 @@ class SamplingParams:
                                      default=frozenset())
 
 
+def stop_id_row(params: SamplingParams, width: int) -> np.ndarray:
+    """The (width,) int32 device encoding of ``params.stop_set``: the stop
+    ids sorted and left-aligned, the remainder padded with ``STOP_PAD``.
+    The fused decode step checks membership with one broadcast compare
+    against this row — the device half of the stop semantics documented on
+    ``SamplingParams`` (the scheduler only ever consults it for tokens the
+    request *generated*, so prompt tokens still never trigger)."""
+    ids = sorted(params.stop_set)
+    if len(ids) > width:
+        raise ValueError(
+            f"stop-id row width {width} cannot hold {len(ids)} stop ids")
+    row = np.full(width, STOP_PAD, np.int32)
+    row[:len(ids)] = ids
+    return row
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     """Engine deployment knobs + the ONE place their dependency matrix is
@@ -117,6 +139,8 @@ class EngineConfig:
     token_budget: int = 0         # 0 → n_slots + chunk (always co-schedules)
     # -- radix prefix cache (PR 4)
     prefix_cache: bool = False
+    # -- fused single-dispatch decode step (PR 6)
+    fused_step: bool = True       # False → legacy host epilogue (parity ref)
     # -- misc
     use_kernel: bool = False
     strategy: str = "top1"        # decentralized engines: "top1" | "mixture"

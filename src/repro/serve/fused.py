@@ -1,0 +1,123 @@
+"""The fused decode-step epilogue: everything a scheduler used to do on the
+host after the model's forward — pick the next token (greedy or seeded
+sampling), check stop/eos ids, check the token budget and the context
+bound, and advance the per-slot position — expressed as pure device ops so
+the whole decode token is ONE jitted dispatch.
+
+The host's per-step work shrinks to a single ``device_get`` of the
+``(next_token, done)`` pair: ``next_token`` feeds the per-request output
+streams, and ``done`` is a small per-slot bitmap (0 = keep decoding, else
+a ``DONE_REASONS`` code) that replaces per-slot Python token inspection
+for retirement detection.
+
+The per-slot sampling state (temps / top_ks / seeds / counts / stop ids /
+budgets) lives in a dict of persistent device arrays — see
+``_SlotTable._device_state`` — rebuilt only when admission, retirement or
+block-table growth changes it, never per step.
+
+Semantics are kept EXACTLY equal to the unfused host epilogue
+(``_SlotTable._advance`` + ``Request.reason_now``):
+
+* stop ids match only *generated* tokens (the state is consulted for the
+  token decoded this step — prompt tokens never reach it);
+* reason precedence is stop > length > truncated;
+* the capacity bound is position-exact: position ``cache_len - 1`` is
+  decodable, the write that would land at ``cache_len`` is not.
+
+This module is a leaf: it imports only jax and the shared ``PROB_FLOOR``
+so every consumer (schedulers, the model's fused entry point, the stacked
+mixture core) can pull it in without import cycles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ensemble import PROB_FLOOR
+
+__all__ = ["DONE_REASONS", "decode_epilogue", "pick_first", "sample_tokens",
+           "_sample_tokens"]
+
+#: ``done`` bitmap code → finish reason (0 means "keep decoding").
+DONE_REASONS = {1: "stop", 2: "length", 3: "truncated"}
+
+
+def _sample_tokens(scores, temps, top_ks, seeds, counts):
+    """Per-slot seeded sampling step (jitted once, batched over slots).
+
+    scores: (B, V) next-token logits (or log-probabilities — argmax and
+    categorical are both invariant to the difference up to the temperature
+    semantics documented on ``Request``); temps: (B,) float32, ≤ 0 rows
+    take the greedy argmax; top_ks: (B,) int32, 0 → full vocabulary;
+    seeds/counts: (B,) uint32/int32 — token ``counts[b]`` of request
+    ``seeds[b]`` draws from ``fold_in(PRNGKey(seed), count)``, so a
+    request's sampled continuation depends only on (seed, scores), never
+    on slot placement or co-scheduled traffic.
+    """
+    V = scores.shape[-1]
+    greedy = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+    k = jnp.where(top_ks <= 0, V, jnp.minimum(top_ks, V))
+    srt = jnp.sort(scores, axis=-1)                      # ascending
+    thresh = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
+    masked = jnp.where(scores >= thresh, scores, -jnp.inf)
+    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
+    keys = jax.vmap(lambda s, c: jax.random.fold_in(
+        jax.random.PRNGKey(s), c))(seeds, counts)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+
+sample_tokens = jax.jit(_sample_tokens)
+
+
+def pick_first(row, temp, top_k, seed, *, from_probs: bool = False):
+    """First token from a prefill's last-position scores (``row``: (1, V))
+    — count 0 of the request's seeded stream, greedy when ``temp <= 0``.
+    Pure (meant to be fused into the prefill/chunk dispatch); returns the
+    (1,) int32 token on device."""
+    if from_probs:
+        row = jnp.log(jnp.maximum(row, PROB_FLOOR))
+    return _sample_tokens(row, temp, top_k, seed,
+                          jnp.zeros((1,), jnp.int32))
+
+
+def decode_epilogue(scores, state, *, cache_len: int,
+                    from_probs: bool = False):
+    """One lockstep decode step's host epilogue as device ops.
+
+    scores: (n_slots, V) this step's next-token scores; state: the per-slot
+    device-state dict (see ``_SlotTable._device_state``) with at least
+
+        tok/pos (int32), active (bool), temps (f32), top_ks (i32),
+        seeds (u32), counts (i32), max_new (i32), stop_ids (i32, padded
+        with -1 — token ids are non-negative, so pad rows never match)
+
+    Returns ``(new_state, next_tok, done)``: the state advanced for the
+    next step (finished rows parked at tok/pos 0 — the scratch-writing
+    idle configuration — and deactivated), the (n_slots,) tokens decoded
+    this step (inactive rows keep their input token and must be ignored),
+    and the (n_slots,) ``DONE_REASONS`` bitmap.
+    """
+    if from_probs:
+        scores = jnp.log(jnp.maximum(scores, PROB_FLOOR))
+    nxt = _sample_tokens(scores, state["temps"], state["top_ks"],
+                         state["seeds"], state["counts"])
+    active = state["active"]
+    nxt = jnp.where(active, nxt, state["tok"]).astype(jnp.int32)
+    counts = state["counts"] + active.astype(jnp.int32)
+    pos = state["pos"] + active.astype(jnp.int32)
+    # reason precedence mirrors Request.reason_now + _advance exactly:
+    # stop > length > truncated, each gated on the slot being active
+    is_stop = active & jnp.any(nxt[:, None] == state["stop_ids"], axis=-1)
+    is_len = active & (counts >= state["max_new"])
+    is_trunc = active & (pos >= cache_len)
+    done = jnp.where(is_stop, 1,
+                     jnp.where(is_len, 2,
+                               jnp.where(is_trunc, 3, 0))).astype(jnp.int32)
+    fin = done > 0
+    new_state = dict(state,
+                     tok=jnp.where(fin, 0, nxt).astype(jnp.int32),
+                     pos=jnp.where(fin, 0, pos).astype(jnp.int32),
+                     counts=counts,
+                     active=active & ~fin)
+    return new_state, nxt, done

@@ -100,10 +100,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.ensemble import (PROB_FLOOR, make_stacked_chunk_fns,
-                                 make_stacked_serving, mix_expert_logits)
+                                 make_stacked_fused, make_stacked_serving,
+                                 mix_expert_logits)
 from repro.models.model import Model
 from repro.serve.api import (EngineConfig, RequestOutput, SamplingParams,
-                             TokenDelta, effective_page_block)
+                             TokenDelta, effective_page_block, stop_id_row)
+from repro.serve.fused import (DONE_REASONS, _sample_tokens, decode_epilogue,
+                               pick_first, sample_tokens)
 from repro.serve.prefix_cache import PrefixCache, block_keys
 
 Array = jnp.ndarray
@@ -193,33 +196,9 @@ class Request:
         return b
 
 
-def _sample_tokens(scores, temps, top_ks, seeds, counts):
-    """Per-slot seeded sampling step (jitted once, batched over slots).
-
-    scores: (B, V) next-token logits (or log-probabilities — argmax and
-    categorical are both invariant to the difference up to the temperature
-    semantics documented on ``Request``); temps: (B,) float32, ≤ 0 rows
-    take the greedy argmax; top_ks: (B,) int32, 0 → full vocabulary;
-    seeds/counts: (B,) uint32/int32 — token ``counts[b]`` of request
-    ``seeds[b]`` draws from ``fold_in(PRNGKey(seed), count)``, so a
-    request's sampled continuation depends only on (seed, scores), never
-    on slot placement or co-scheduled traffic.
-    """
-    V = scores.shape[-1]
-    greedy = jnp.argmax(scores, axis=-1).astype(jnp.int32)
-    k = jnp.where(top_ks <= 0, V, jnp.minimum(top_ks, V))
-    srt = jnp.sort(scores, axis=-1)                      # ascending
-    thresh = jnp.take_along_axis(srt, (V - k)[:, None], axis=-1)
-    masked = jnp.where(scores >= thresh, scores, -jnp.inf)
-    scaled = masked / jnp.maximum(temps, 1e-6)[:, None]
-    keys = jax.vmap(lambda s, c: jax.random.fold_in(
-        jax.random.PRNGKey(s), c))(seeds, counts)
-    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
-    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
-
-
-sample_tokens = jax.jit(_sample_tokens)
-
+# _sample_tokens / sample_tokens moved to repro.serve.fused (so the fused
+# dispatch, the stacked mixture core and the schedulers share one tracing)
+# and re-exported above for back-compat.
 
 _FEATURES_MSG = ("request {rid}: this engine routes on frozen-encoder "
                  "features — pass features= to add_request")
@@ -341,6 +320,14 @@ class _SlotTable:
         self.prefill_order: List[int] = []      # FCFS over mid-prefill slots
         self._seq_axis = 1         # sequence axis of the embedded prompt
         self._from_probs = False   # mixture scores are probabilities
+        self.fused = False         # single-dispatch decode step (subclasses
+        #                          # flip it on after building the fused fns)
+        self._dstate = None        # persistent per-slot device state; None →
+        #                          # rebuild from the host mirrors next step
+        self._tables_dirty = False  # block tables grew but nothing else
+        #                          # changed: patch st["tables"] only
+        self._stop_width = 1       # stop-id matrix width (monotone, pow2 —
+        #                          # each growth retraces the fused step once)
         self.block_size = block_size
         self.paged = block_size > 0
         if self.paged:
@@ -610,18 +597,33 @@ class _SlotTable:
             self.block_tables[slot, :len(shared)] = shared
             self.block_tables[slot, len(shared):need] = blocks
             self.n_alloc[slot] = need
+            self._tables_dirty = True    # only the table changed
             return True
         blocks = self._alloc_blocks(need - have)
         if blocks is None:
             return False
         self.block_tables[slot, have:need] = blocks
         self.n_alloc[slot] = need
+        # growth changes the table and NOTHING else — patch st["tables"]
+        # instead of tearing down the whole device state (mid-decode growth
+        # fires every page_block steps; a full rebuild there costs more
+        # than the dispatch it feeds)
+        self._tables_dirty = True
         return True
 
     def _grow_active(self) -> None:
         """Before a lockstep decode step: make sure every decoding slot
         owns the block its next write position lands in."""
         if not self.paged or self.ring:
+            return
+        # vectorized fast path: positions only cross a block boundary every
+        # block_size steps, so most steps no slot needs growth — one numpy
+        # compare instead of a python _reserve call per slot
+        need = np.minimum(-(-(self.pos + 1) // self.block_size),
+                          self.nb_slot)
+        # n_alloc == 0 masks out free slots (a decoding slot always holds
+        # at least its admission block)
+        if not np.any((need > self.n_alloc) & (self.n_alloc > 0)):
             return
         for slot in self.decoding:
             if not self._reserve(slot, int(self.pos[slot]) + 1):
@@ -636,6 +638,7 @@ class _SlotTable:
         self.slot_req[slot] = None
         self.pos[slot] = 0           # free slots write the scratch block
         self.last_tok[slot] = 0
+        self._dstate = None          # retirement/abort: rebuild device state
         if self.paged:
             n = int(self.n_alloc[slot])
             if n:
@@ -681,6 +684,7 @@ class _SlotTable:
         self.slot_req[slot] = req
         self.pos[slot] = prompt_len
         self.last_tok[slot] = first_tok
+        self._dstate = None          # admission: rebuild device state
 
     def _advance(self, next_tok: np.ndarray) -> List[Request]:
         """Record one decoded token per decoding slot; retire finished
@@ -711,6 +715,151 @@ class _SlotTable:
         self._release(slot)
 
     # ------------------------------------------------------------------
+    # Fused single-dispatch decode step (repro.serve.fused)
+    # ------------------------------------------------------------------
+
+    def _device_state(self) -> Dict[str, Array]:
+        """The per-slot device-state dict the fused dispatch consumes:
+        tok/pos plus every sampling/stop/budget control, as persistent
+        device arrays. Rebuilt from the host mirrors ONLY when admission,
+        retirement/abort or block-table growth invalidated it
+        (``self._dstate = None``); between those events the dict returned
+        by the previous fused dispatch is passed straight back in — the
+        steady-state step uploads nothing. Pure block-table growth
+        (``_tables_dirty``) patches ``st["tables"]`` alone: one small
+        upload instead of a dozen."""
+        if self._dstate is not None:
+            if self.paged:
+                nbl = self._nb_live()
+                # growth marks the table dirty; the width check is a
+                # belt-and-braces guard for any horizon move without one
+                if self._tables_dirty or \
+                        self._dstate["tables"].shape[1] != nbl:
+                    self._dstate = dict(
+                        self._dstate,
+                        tables=jnp.asarray(self._decode_tables()[:, :nbl]))
+                    self._tables_dirty = False
+            return self._dstate
+        self._tables_dirty = False
+        n = self.n_slots
+        temps = np.zeros(n, np.float32)
+        top_ks = np.zeros(n, np.int32)
+        seeds = np.zeros(n, np.uint32)
+        counts = np.zeros(n, np.int32)
+        max_new = np.full(n, np.iinfo(np.int32).max, np.int32)
+        active = np.zeros(n, np.bool_)
+        dec = self.decoding
+        for s in dec:
+            need = len(self.slot_req[s].params.stop_set)
+            while need > self._stop_width:   # monotone pow2: bounded retraces
+                self._stop_width *= 2
+        stops = np.full((n, self._stop_width), -1, np.int32)
+        for s in dec:
+            r = self.slot_req[s]
+            active[s] = True
+            temps[s], top_ks[s] = r.temperature, r.top_k
+            # & wraps negative seeds into uint32 range (NumPy 2.x raises
+            # on out-of-bounds assignment instead of wrapping)
+            seeds[s], counts[s] = r.seed & 0xFFFFFFFF, len(r.out)
+            max_new[s] = r.max_new
+            stops[s] = stop_id_row(r.params, self._stop_width)
+        st = {"tok": jnp.asarray(self.last_tok),
+              "pos": jnp.asarray(self.pos),
+              "active": jnp.asarray(active),
+              "temps": jnp.asarray(temps), "top_ks": jnp.asarray(top_ks),
+              "seeds": jnp.asarray(seeds), "counts": jnp.asarray(counts),
+              "max_new": jnp.asarray(max_new),
+              "stop_ids": jnp.asarray(stops)}
+        if self.paged:
+            st["tables"] = jnp.asarray(
+                self._decode_tables()[:, :self._nb_live()])
+        self._dstate = self._state_extras(st)
+        return self._dstate
+
+    def _state_extras(self, st: Dict[str, Array]) -> Dict[str, Array]:
+        """Subclass hook: extra per-slot device state the fused dispatch
+        needs (the mixture server adds its router weights)."""
+        return st
+
+    def _pick_args(self, req: Request):
+        """The (temp, top_k, seed) device rows for a fused first-token
+        pick (count is 0 by construction — the pick IS token 0)."""
+        return (jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.top_k], jnp.int32),
+                jnp.asarray([req.seed & 0xFFFFFFFF], jnp.uint32))
+
+    def _advance_fused(self, dec: List[int], nxt: np.ndarray,
+                       done: np.ndarray) -> List[Request]:
+        """Host half of the fused step: record each decoding slot's token
+        and retire the slots the device-side ``done`` bitmap flagged — no
+        per-slot token inspection, the reason is already decided."""
+        retired = []
+        t = time.perf_counter()
+        for slot in dec:
+            req = self.slot_req[slot]
+            req.record(int(nxt[slot]), t)
+            self.pos[slot] += 1
+            self.last_tok[slot] = nxt[slot]
+            d = int(done[slot])
+            if d:
+                reason = DONE_REASONS[d]
+                # the device bitmap replaces reason_now(): they must agree
+                assert reason == (req.reason_now() or "truncated"), \
+                    (slot, reason, req.reason_now())
+                self._retire_from_slot(slot, req, reason)
+                retired.append(req)
+        return retired
+
+    def _run_fused(self, st):
+        """Dispatch one fused decode step; returns device (nxt, done) and
+        stores the new cache/state on self."""
+        raise NotImplementedError
+
+    def _run_fused_chunk(self, st, slot, xc, start, length, cbt, pick):
+        """Fused decode + one prefill chunk (+ device-side first-token
+        pick); returns device (nxt, done, first)."""
+        raise NotImplementedError
+
+    def _run_chunk_only(self, slot, xc, start, length, cbt, pick):
+        """One prefill chunk + device-side first-token pick (nothing
+        decoding); returns the device (1,) first token."""
+        raise NotImplementedError
+
+    def _decode_step_fused(self) -> List[Request]:
+        """One scheduler step as ONE jitted device dispatch: model forward
+        (+ optional co-scheduled prefill chunk), Eq. 27 mixing where
+        applicable, seeded sampling, stop/budget/context checks and the
+        position advance all run on device; the host reads back only the
+        (next_tok, done) pair — and the chunk's first token on a prefill's
+        final chunk."""
+        dec = self.decoding
+        do_chunk = self.chunked and self._schedule_chunk()
+        if not dec and not do_chunk:
+            return []
+        if do_chunk:
+            slot, xc, start, length, cbt = self._chunk_args()
+            pick = self._pick_args(self.slot_req[slot])
+            if not dec:
+                first = self._run_chunk_only(slot, xc, start, length, cbt,
+                                             pick)
+                return self._after_chunk_tok(
+                    slot, length, lambda: int(jax.device_get(first)[0]))
+            self._grow_active()
+            st = self._device_state()
+            nxt, done, first = self._run_fused_chunk(st, slot, xc, start,
+                                                     length, cbt, pick)
+            nxt_h, done_h, first_h = jax.device_get((nxt, done, first))
+            retired = self._advance_fused(dec, nxt_h, done_h)
+            retired += self._after_chunk_tok(slot, length,
+                                             lambda: int(first_h[0]))
+            return retired
+        self._grow_active()
+        st = self._device_state()
+        nxt, done = self._run_fused(st)
+        nxt_h, done_h = jax.device_get((nxt, done))
+        return self._advance_fused(dec, nxt_h, done_h)
+
+    # ------------------------------------------------------------------
     # Token selection: greedy fast path / per-request seeded sampling
     # ------------------------------------------------------------------
 
@@ -718,9 +867,11 @@ class _SlotTable:
                     from_probs: bool = False) -> int:
         """First token from a prefill's last-position scores ((V,) row).
         Greedy unless the request asked for sampling; token index 0 of the
-        request's seeded stream either way."""
-        if req.temperature <= 0:
-            return int(jnp.argmax(row))
+        request's seeded stream either way. One jitted dispatch for BOTH
+        paths (greedy rows take the argmax inside ``sample_tokens``) — the
+        eager ``jnp.argmax`` this replaces cost a separate device sync per
+        admitted request. The chunked path avoids even this dispatch: its
+        pick is fused into the final chunk's step (``pick_first``)."""
         if from_probs:
             row = jnp.log(jnp.maximum(row, PROB_FLOOR))
         return int(sample_tokens(
@@ -838,6 +989,7 @@ class _SlotTable:
         self.prefill_order.append(slot)
         self.pos[slot] = 0
         self.last_tok[slot] = 0
+        self._dstate = None          # table masking changed for this slot
 
     def _decode_tables(self) -> np.ndarray:
         """Block tables as the decode dispatch must see them: mid-prefill
@@ -849,6 +1001,21 @@ class _SlotTable:
         bt = self.block_tables.copy()
         bt[self.prefill_order] = 0
         return bt
+
+    def _nb_live(self) -> int:
+        """Logical-block horizon of the decode dispatch: columns past
+        ``max(pos) // block + 1`` hold no key any slot can attend (the
+        position mask zeroes them), so the tables are truncated to this
+        width before upload — the gather AND the attention span shrink to
+        the live region, the jnp analogue of the kernel's pos-derived
+        block skip. Ring (sliding-window) layouts address the full
+        logical span and are never truncated. The dispatch retraces once
+        per distinct width — at most ``nb_slot`` shapes, all warmed by
+        the first request that decodes to full depth."""
+        if self.ring:
+            return self.nb_slot
+        mx = int(self.pos.max(initial=0))
+        return min(mx // self.block_size + 1, self.nb_slot)
 
     def _schedule_chunk(self) -> bool:
         """Token-budget admission of one prefill chunk into this step:
@@ -875,17 +1042,29 @@ class _SlotTable:
         return slot, xc, start, length, cbt
 
     def _after_chunk(self, slot: int, length: int, c_out) -> List[Request]:
+        """Unfused wrapper over ``_after_chunk_tok``: the first token is
+        picked eagerly from the chunk's output scores."""
+        req = self.slot_req[slot]
+        return self._after_chunk_tok(
+            slot, length,
+            lambda: self._pick_first(req, c_out[0],
+                                     from_probs=self._from_probs))
+
+    def _after_chunk_tok(self, slot: int, length: int,
+                         first_fn) -> List[Request]:
         """Advance a slot's prefill by one chunk; on the final chunk take
-        the first token from the chunk's last valid position (greedy, or
-        the request's seeded sample), register the prompt's full blocks
-        with the prefix cache, splice the carry's direct-leaf state into
-        the batched cache, and transition the slot to decode (or retire,
-        for context-filling prompts and max_new == 1)."""
+        the first token from ``first_fn`` (unfused: an eager pick from the
+        chunk scores; fused: materializing the device-side pick that rode
+        the chunk dispatch — intermediate chunks never call it, keeping
+        their zero-sync property), register the prompt's full blocks with
+        the prefix cache, splice the carry's direct-leaf state into the
+        batched cache, and transition the slot to decode (or retire, for
+        context-filling prompts and max_new == 1)."""
         self.prefill_pos[slot] += length
         if int(self.prefill_pos[slot]) < int(self.prefill_width[slot]):
             return []
         req = self.slot_req[slot]
-        first = self._pick_first(req, c_out[0], from_probs=self._from_probs)
+        first = int(first_fn())
         width = int(self.prefill_width[slot])
         self.prefill_order.remove(slot)
         self.prefilling[slot] = False
@@ -964,6 +1143,7 @@ class _SlotTable:
 def _legacy_config(n_slots: int, cache_len: int, *, page_block: int,
                    pool_blocks: int, chunk: int, token_budget: int,
                    prefix_cache: bool, use_kernel: bool,
+                   fused_step: bool = True,
                    strategy: str = "top1") -> EngineConfig:
     """Map the pre-redesign constructor kwargs onto an ``EngineConfig`` so
     every entry point funnels through one ``validate()``."""
@@ -972,8 +1152,8 @@ def _legacy_config(n_slots: int, cache_len: int, *, page_block: int,
         page_block=page_block if page_block > 0 else 16,
         pool_blocks=pool_blocks, chunked_prefill=chunk > 0,
         chunk=chunk if chunk > 0 else 16, token_budget=token_budget,
-        prefix_cache=prefix_cache, use_kernel=use_kernel,
-        strategy=strategy)
+        prefix_cache=prefix_cache, fused_step=fused_step,
+        use_kernel=use_kernel, strategy=strategy)
 
 
 def make_chunk_fns(model: Model, cache_len: int, chunk: int, *,
@@ -1039,6 +1219,45 @@ def make_serve_fns(model: Model, cache_len: int, *, use_kernel: bool = False,
     return prefill, decode
 
 
+def make_fused_fns(model: Model, cache_len: int, chunk: int = 0, *,
+                   use_kernel: bool = False, paged: bool = False):
+    """The jitted fused-step function family one SlotServer runs on
+    (shared across the pods of a top-1 DecentralizedSlotServer, like
+    ``make_serve_fns``). Returns ``(step, step_chunk, chunk_only)``:
+
+    * ``step(params, cache, state)`` → ``(cache, state, next_tok, done)``
+      — the WHOLE decode token (forward + sampling + stop/budget/context
+      checks + position advance) in one dispatch
+      (``Model.fused_decode_step``);
+    * ``step_chunk(params, cache, state, carry, xc, start, length, cbt,
+      temp, top_k, seed)`` — the same with one co-scheduled prefill chunk
+      and its device-side first-token pick fused in;
+    * ``chunk_only(params, cache, carry, xc, start, length, cbt, temp,
+      top_k, seed)`` → ``(first, carry, cache)`` — a chunk with nothing
+      decoding. The last two are None when ``chunk == 0``.
+    """
+    step = jax.jit(lambda p, c, st: model.fused_decode_step(
+        p, c, st, cache_len=cache_len, use_kernel=use_kernel, paged=paged))
+    if chunk <= 0:
+        return step, None, None
+
+    def step_chunk(p, c, st, carry, xc, start, ln, cbt, temp, top_k, seed):
+        c, st, nxt, done = model.fused_decode_step(
+            p, c, st, cache_len=cache_len, use_kernel=use_kernel,
+            paged=paged)
+        c_out, carry, c = model.prefill_chunk(p, c, carry, xc, start, ln,
+                                              cbt, use_kernel=use_kernel)
+        first = pick_first(c_out, temp, top_k, seed)
+        return c, st, nxt, done, first, carry
+
+    def chunk_only(p, c, carry, xc, start, ln, cbt, temp, top_k, seed):
+        c_out, carry, c = model.prefill_chunk(p, c, carry, xc, start, ln,
+                                              cbt, use_kernel=use_kernel)
+        return pick_first(c_out, temp, top_k, seed), carry, c
+
+    return step, jax.jit(step_chunk), jax.jit(chunk_only)
+
+
 class SlotServer(_SlotTable):
     """Continuous batching over ONE expert / model (greedy decoding).
 
@@ -1064,14 +1283,14 @@ class SlotServer(_SlotTable):
                  cache_len: int = 0, *, use_kernel: bool = False,
                  serve_fns=None, page_block: int = 0, pool_blocks: int = 0,
                  chunk: int = 0, token_budget: int = 0, chunk_fns=None,
-                 prefix_cache: bool = False,
-                 config: Optional[EngineConfig] = None):
+                 prefix_cache: bool = False, fused_step: bool = True,
+                 fused_fns=None, config: Optional[EngineConfig] = None):
         if config is None:
             config = _legacy_config(
                 n_slots, cache_len, page_block=page_block,
                 pool_blocks=pool_blocks, chunk=chunk,
                 token_budget=token_budget, prefix_cache=prefix_cache,
-                use_kernel=use_kernel)
+                fused_step=fused_step, use_kernel=use_kernel)
         config.validate(model)
         self.config = config
         n_slots, cache_len = config.n_slots, config.cache_len
@@ -1099,6 +1318,12 @@ class SlotServer(_SlotTable):
         if self.chunked:
             self._prep, self._fused, self._chunk_only = \
                 chunk_fns or make_chunk_fns(model, cache_len, chunk,
+                                            use_kernel=use_kernel,
+                                            paged=self.paged)
+        self.fused = config.fused_step
+        if self.fused:
+            self._fstep, self._fstep_chunk, self._fchunk_only = \
+                fused_fns or make_fused_fns(model, cache_len, chunk,
                                             use_kernel=use_kernel,
                                             paged=self.paged)
 
@@ -1129,11 +1354,33 @@ class SlotServer(_SlotTable):
         self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 
+    def _run_fused(self, st):
+        self.cache, self._dstate, nxt, done = self._fstep(
+            self.params, self.cache, st)
+        return nxt, done
+
+    def _run_fused_chunk(self, st, slot, xc, start, length, cbt, pick):
+        (self.cache, self._dstate, nxt, done, first,
+         self.prefill_carry[slot]) = self._fstep_chunk(
+            self.params, self.cache, st, self.prefill_carry[slot], xc,
+            start, length, cbt, *pick)
+        return nxt, done, first
+
+    def _run_chunk_only(self, slot, xc, start, length, cbt, pick):
+        first, self.prefill_carry[slot], self.cache = self._fchunk_only(
+            self.params, self.cache, self.prefill_carry[slot], xc, start,
+            length, cbt, *pick)
+        return first
+
     def _decode_step(self) -> List[Request]:
         """One raw scheduler dispatch. Monolithic: lockstep decode over
         every active slot. Chunked: co-schedule the lockstep decode with
         one prefill chunk under the token budget, in a single jitted
-        dispatch. Returns requests retired this step."""
+        dispatch. Fused (the default): the host epilogue rides the same
+        dispatch too — see ``_decode_step_fused``. Returns requests
+        retired this step."""
+        if self.fused:
+            return self._decode_step_fused()
         dec = self.decoding
         do_chunk = self.chunked and self._schedule_chunk()
         if not dec and not do_chunk:
@@ -1151,7 +1398,7 @@ class SlotServer(_SlotTable):
                 d_logits, c_out, carry, self.cache = self._fused(
                     self.params, self.cache, jnp.asarray(self.last_tok),
                     jnp.asarray(self.pos),
-                    jnp.asarray(self._decode_tables()),
+                    jnp.asarray(self._decode_tables()[:, :self._nb_live()]),
                     self.prefill_carry[slot], xc, start, length, cbt)
             else:
                 d_logits, c_out, carry, self.cache = self._fused(
@@ -1167,7 +1414,8 @@ class SlotServer(_SlotTable):
             self._grow_active()
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.last_tok),
-                jnp.asarray(self.pos), jnp.asarray(self._decode_tables()))
+                jnp.asarray(self.pos),
+                jnp.asarray(self._decode_tables()[:, :self._nb_live()]))
         else:
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self.last_tok),
@@ -1187,13 +1435,15 @@ class MixtureSlotServer(_SlotTable):
                  use_kernel: bool = False, page_block: int = 0,
                  pool_blocks: int = 0, chunk: int = 0,
                  token_budget: int = 0, prefix_cache: bool = False,
+                 fused_step: bool = True,
                  config: Optional[EngineConfig] = None):
         if config is None:
             config = _legacy_config(
                 n_slots, cache_len, page_block=page_block,
                 pool_blocks=pool_blocks, chunk=chunk,
                 token_budget=token_budget, prefix_cache=prefix_cache,
-                use_kernel=use_kernel, strategy="mixture")
+                fused_step=fused_step, use_kernel=use_kernel,
+                strategy="mixture")
         config.validate(model)
         self.config = config
         n_slots, cache_len = config.n_slots, config.cache_len
@@ -1216,6 +1466,7 @@ class MixtureSlotServer(_SlotTable):
         self.stacked, param_axes, self._prefill_all, self._mix_decode = \
             make_stacked_serving(model, expert_params, cache_len,
                                  use_kernel=use_kernel, paged=self.paged)
+        chunk_all = None
         if self.chunked:
             self._prep_all, chunk_all = \
                 make_stacked_chunk_fns(model, self.stacked, param_axes,
@@ -1238,6 +1489,12 @@ class MixtureSlotServer(_SlotTable):
                     return probs, c_probs, carry, c
             self._fused_mix = jax.jit(fused)
             self._chunk_only_mix = jax.jit(chunk_all)
+        self.fused = config.fused_step
+        if self.fused:
+            self._fstep, self._fstep_chunk, self._fchunk_only = \
+                make_stacked_fused(model, param_axes, cache_len,
+                                   chunk_all=chunk_all,
+                                   use_kernel=use_kernel, paged=self.paged)
         # expert (K) dim at axis 1, AFTER each leaf's scan dim — the layout
         # the vmapped scanned decode consumes without per-step transposes
         shapes = model.paged_cache_shapes(
@@ -1283,7 +1540,33 @@ class MixtureSlotServer(_SlotTable):
         self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 
+    def _state_extras(self, st):
+        st["weights"] = jnp.asarray(self.weights)
+        return st
+
+    def _run_fused(self, st):
+        self.cache, self._dstate, nxt, done = self._fstep(
+            self.stacked, self.cache, st)
+        return nxt, done
+
+    def _run_fused_chunk(self, st, slot, xc, start, length, cbt, pick):
+        w_row = jnp.asarray(self.weights[slot:slot + 1])
+        (self.cache, self._dstate, nxt, done, first,
+         self.prefill_carry[slot]) = self._fstep_chunk(
+            self.stacked, self.cache, st, self.prefill_carry[slot], xc,
+            start, length, cbt, w_row, *pick)
+        return nxt, done, first
+
+    def _run_chunk_only(self, slot, xc, start, length, cbt, pick):
+        w_row = jnp.asarray(self.weights[slot:slot + 1])
+        first, self.prefill_carry[slot], self.cache = self._fchunk_only(
+            self.stacked, self.cache, self.prefill_carry[slot], xc, start,
+            length, cbt, w_row, *pick)
+        return first
+
     def _decode_step(self) -> List[Request]:
+        if self.fused:
+            return self._decode_step_fused()
         dec = self.decoding
         do_chunk = self.chunked and self._schedule_chunk()
         if not dec and not do_chunk:
@@ -1302,7 +1585,7 @@ class MixtureSlotServer(_SlotTable):
                 probs, c_out, carry, self.cache = self._fused_mix(
                     self.stacked, self.cache, jnp.asarray(self.last_tok),
                     jnp.asarray(self.pos), jnp.asarray(self.weights),
-                    jnp.asarray(self._decode_tables()),
+                    jnp.asarray(self._decode_tables()[:, :self._nb_live()]),
                     self.prefill_carry[slot], xc, start, length, cbt, w_row)
             else:
                 probs, c_out, carry, self.cache = self._fused_mix(
@@ -1319,7 +1602,7 @@ class MixtureSlotServer(_SlotTable):
             probs, self.cache = self._mix_decode(
                 self.stacked, self.cache, jnp.asarray(self.last_tok),
                 jnp.asarray(self.pos), jnp.asarray(self.weights),
-                jnp.asarray(self._decode_tables()))
+                jnp.asarray(self._decode_tables()[:, :self._nb_live()]))
         else:
             probs, self.cache = self._mix_decode(
                 self.stacked, self.cache, jnp.asarray(self.last_tok),
@@ -1349,13 +1632,15 @@ class DecentralizedSlotServer:
                  strategy: str = "top1", use_kernel: bool = False,
                  page_block: int = 0, pool_blocks: int = 0, chunk: int = 0,
                  token_budget: int = 0, prefix_cache: bool = False,
+                 fused_step: bool = True,
                  config: Optional[EngineConfig] = None):
         if config is None:
             config = _legacy_config(
                 n_slots, cache_len, page_block=page_block,
                 pool_blocks=pool_blocks, chunk=chunk,
                 token_budget=token_budget, prefix_cache=prefix_cache,
-                use_kernel=use_kernel, strategy=strategy)
+                fused_step=fused_step, use_kernel=use_kernel,
+                strategy=strategy)
         config.validate(model)
         self.config = config
         self.model, self.router = model, router
@@ -1374,8 +1659,13 @@ class DecentralizedSlotServer:
                                   use_kernel=config.use_kernel,
                                   paged=eff_block > 0) if chunk > 0 \
                 else None
+            ffns = make_fused_fns(model, cache_len, chunk,
+                                  use_kernel=config.use_kernel,
+                                  paged=eff_block > 0) \
+                if config.fused_step else None
             self.pods = [SlotServer(model, p, config=config,
-                                    serve_fns=fns, chunk_fns=cfns)
+                                    serve_fns=fns, chunk_fns=cfns,
+                                    fused_fns=ffns)
                          for p in expert_params]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,

@@ -194,6 +194,19 @@ def block_table_pspec(rules, mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def slot_state_pspec_tree(state_like, rules, mesh: Mesh):
+    """Placement for the fused decode step's per-slot device state (the
+    tok/pos/temps/top_ks/seeds/counts/max_new/stop_ids/tables/weights dict
+    of ``_SlotTable._device_state``): REPLICATED, like the block tables it
+    now carries (``block_table_pspec``) — every leaf is a few-hundred-byte
+    int/float row, so each shard keeps its own copy and the fused
+    epilogue's sampling + stop/budget checks run locally with zero
+    collectives; only the model forward inside the same dispatch touches
+    sharded operands."""
+    import jax
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), state_like)
+
+
 def paged_pool_pspec_tree(paged_cache_shapes, rules, mesh: Mesh, seq_axes):
     """Shardings for the PAGED decode cache. ``seq_axes`` is the
     ``CacheSpec.paged.seq_axes`` pytree: leaves marked ``-1`` are direct

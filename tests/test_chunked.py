@@ -61,6 +61,31 @@ def test_chunk_prefill_kernel(C, NB, block, H, KV, dh, start, dtype):
                                np.asarray(want, np.float32), **TOL[dtype])
 
 
+@pytest.mark.parametrize("block,NB,start", [(8, 6, 0), (8, 6, 19),
+                                            (16, 4, 33), (32, 3, 5)])
+@pytest.mark.parametrize("bps", [2, 3, 4])
+def test_chunk_prefill_kernel_blocks_per_step(block, NB, start, bps):
+    """Multi-block grid steps must be bit-identical to bps=1 — the horizon
+    here is the last query position's block (start + C - 1), and the
+    padded tail when bps does not divide NB is killed by ``ki < nb``."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    C, H, KV, dh = 5, 8, 4, 32
+    P = NB + 2
+    q = rand(ks[0], (C, H, dh), jnp.float32)
+    kp = rand(ks[1], (P, block, KV, dh), jnp.float32)
+    vp = rand(ks[2], (P, block, KV, dh), jnp.float32)
+    rng = np.random.default_rng(2)
+    bt = jnp.asarray(rng.permutation(np.arange(1, P))[:NB], jnp.int32)
+    base = chunk_prefill_attention(q, kp, vp, jnp.int32(start), bt,
+                                   interpret=True)
+    want = ref.chunk_prefill_attention_ref(q, kp, vp, jnp.int32(start), bt)
+    out = chunk_prefill_attention(q, kp, vp, jnp.int32(start), bt,
+                                  blocks_per_step=bps, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_chunk_prefill_ref_row0_is_decode_ref():
     """A one-row chunk IS a single decode query: the chunk oracle must
     degenerate to the paged decode oracle."""

@@ -1,0 +1,206 @@
+"""Fused single-dispatch decode step: token-for-token parity with the
+unfused scheduler path.
+
+The fused step moves the whole serving epilogue — seeded sampling,
+stop/eos/budget/context checks, the position advance — onto the device;
+the unfused path computes the same decisions on the host from the raw
+logits. Every test drives BOTH paths over the same queue and asserts
+identical tokens and identical finish reasons, across:
+
+* all six cache families (dense/moe/vlm/audio/ssm/hybrid), with greedy,
+  sampled and stop-token requests in one queue — including a stop id
+  that hits MID-stream (learned from a probe run) and a stop id that
+  appears in the PROMPT (which must never trigger);
+* retirement landing in the same scheduler step as a waiting request's
+  admission (slot churn exercises the device-state rebuild);
+* all three server types: the paged+chunked SlotServer, the stacked
+  MixtureSlotServer, and the top-1 DecentralizedSlotServer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.router import CentroidRouter, RouterConfig
+from repro.models import build_model
+from repro.serve.api import SamplingParams
+from repro.serve.scheduler import (DecentralizedSlotServer,
+                                   MixtureSlotServer, Request, SlotServer)
+
+FAMILY_ARCHS = [
+    ("qwen3_8b", "dense"),
+    ("deepseek_moe_16b", "moe"),
+    ("internvl2_2b", "vlm"),
+    ("whisper_small", "audio"),
+    ("xlstm_125m", "ssm"),
+    ("zamba2_2_7b", "hybrid"),
+]
+
+PROMPT_LENS = (7, 11, 5, 9)
+
+
+def _extras(cfg, rng):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = rng.normal(
+            size=(cfg.n_patches, cfg.vision_dim)).astype(np.float32)
+    if cfg.family == "audio":
+        extras["frames"] = rng.normal(
+            size=(cfg.n_audio_frames, cfg.audio_dim)).astype(np.float32)
+    return extras
+
+
+def _prompts(cfg, seed=42):
+    rng = np.random.default_rng(seed)
+    ps = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+          for n in PROMPT_LENS]
+    ex = [_extras(cfg, rng) for _ in PROMPT_LENS]
+    return ps, ex
+
+
+def _mixed_queue(cfg, stop_id, feats=None):
+    """Greedy + sampled + stop-mid-stream + stop-id-in-prompt, rebuilt
+    identically (fixed seed) for each server so runs are comparable."""
+    ps, ex = _prompts(cfg)
+    f = (lambda i: feats[i]) if feats is not None else (lambda i: None)
+    return [
+        Request(0, ps[0], 6, extras=ex[0], features=f(0)),
+        Request(1, ps[1], 5, extras=ex[1], features=f(1),
+                params=SamplingParams(max_new=5, temperature=0.8,
+                                      top_k=8, seed=123)),
+        # the probe guarantees this id is GENERATED mid-stream: the
+        # request must retire early with finish_reason == "stop"
+        Request(2, ps[2], 8, extras=ex[2], features=f(2),
+                params=SamplingParams(max_new=8, stop_token_ids=(stop_id,))),
+        # same stop id sitting in the PROMPT: admission must not trigger
+        # it (only generated tokens are inspected)
+        Request(3, np.append(ps[3], stop_id).astype(np.int32), 4,
+                extras=ex[3], features=f(3),
+                params=SamplingParams(max_new=4, stop_token_ids=(stop_id,))),
+    ]
+
+
+def _probe_stop_id(mk_server, cfg, feats=None):
+    """Second generated token of request 2's solo greedy run — a stop id
+    that the full queue's request 2 will emit mid-stream (per-request
+    decoding is independent of co-scheduled traffic)."""
+    ps, ex = _prompts(cfg)
+    f = feats[2] if feats is not None else None
+    out = mk_server(False).serve(
+        [Request(2, ps[2], 8, extras=ex[2], features=f)])
+    assert len(out[2]) >= 2
+    return int(out[2][1])
+
+
+def _assert_pair_parity(mk_server, cfg, feats=None):
+    stop_id = _probe_stop_id(mk_server, cfg, feats)
+    qf = _mixed_queue(cfg, stop_id, feats)
+    got_f = mk_server(True).serve(qf)
+    qu = _mixed_queue(cfg, stop_id, feats)
+    got_u = mk_server(False).serve(qu)
+    assert got_f == got_u, (got_f, got_u)
+    for rf, ru in zip(qf, qu):
+        assert rf.finish_reason == ru.finish_reason, \
+            (rf.rid, rf.finish_reason, ru.finish_reason)
+    # the mid-stream stop fired early, on the stop token itself
+    assert qf[2].finish_reason == "stop", qf[2].finish_reason
+    assert len(qf[2].out) < 8 and qf[2].out[-1] == stop_id
+    # the in-prompt stop id did NOT fire at admission: the request decoded
+    # its first token, and only a GENERATED occurrence may retire it
+    assert len(qf[3].out) >= 1
+    if qf[3].finish_reason == "stop":
+        assert qf[3].out[-1] == stop_id
+
+
+@pytest.mark.parametrize("arch,family", FAMILY_ARCHS)
+def test_fused_family_parity(arch, family):
+    """Contiguous SlotServer, fused vs unfused, for every cache family."""
+    cfg = get_smoke_config(arch).reduced(vocab=256)
+    assert cfg.family == family
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def mk(fused):
+        return SlotServer(model, params, n_slots=2, cache_len=40,
+                          fused_step=fused)
+
+    _assert_pair_parity(mk, cfg)
+
+
+def test_fused_retirement_with_admission():
+    """Budgets differing by one make a slot retire while a request is
+    still waiting: the fused path's device-state rebuild on the
+    retire/admit churn must not perturb any request's tokens."""
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    ps = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+          for n in (6, 8, 5)]
+
+    def queue():
+        return [Request(i, p, m) for i, (p, m) in
+                enumerate(zip(ps, (3, 4, 3)))]
+
+    def mk(fused):
+        return SlotServer(model, params, n_slots=2, cache_len=32,
+                          fused_step=fused)
+
+    qf, qu = queue(), queue()
+    assert mk(True).serve(qf) == mk(False).serve(qu)
+    for rf, ru in zip(qf, qu):
+        assert rf.finish_reason == ru.finish_reason == "length"
+
+
+def _mixture_setup():
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=128)
+    model = build_model(cfg)
+    K, Df = 3, 16
+    experts = [model.init(jax.random.PRNGKey(k)) for k in range(K)]
+    rng = np.random.default_rng(1)
+    router = CentroidRouter(
+        jnp.asarray(rng.normal(size=(K, Df)), jnp.float32),
+        RouterConfig(top_k=2))
+    feats = rng.normal(size=(len(PROMPT_LENS), Df)).astype(np.float32)
+    return cfg, model, experts, router, feats
+
+
+def test_fused_paged_chunked_server_parity():
+    """Paged + chunked-prefill SlotServer: the fused step co-schedules a
+    prefill chunk with the decode dispatch; both halves must agree with
+    the unfused scheduler token-for-token."""
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def mk(fused):
+        return SlotServer(model, params, n_slots=2, cache_len=48,
+                          page_block=8, chunk=8, fused_step=fused)
+
+    _assert_pair_parity(mk, cfg)
+
+
+def test_fused_mixture_server_parity():
+    """Stacked mixture server: Eq. 27 mixing + epilogue in one dispatch
+    must equal the unfused mix-then-host-epilogue path."""
+    cfg, model, experts, router, feats = _mixture_setup()
+
+    def mk(fused):
+        return MixtureSlotServer(model, experts, router, n_slots=2,
+                                 cache_len=24, fused_step=fused)
+
+    _assert_pair_parity(mk, cfg, feats)
+
+
+def test_fused_decentralized_server_parity():
+    """Top-1 decentralized server: every pod's fused step must agree with
+    its unfused twin under routed admission."""
+    cfg, model, experts, router, feats = _mixture_setup()
+
+    def mk(fused):
+        return DecentralizedSlotServer(model, experts, router, n_slots=2,
+                                       cache_len=24, strategy="top1",
+                                       fused_step=fused)
+
+    _assert_pair_parity(mk, cfg, feats)

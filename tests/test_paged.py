@@ -84,6 +84,41 @@ def test_paged_decode_kernel_ring(pos_vals):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("block,NB", [(8, 6), (16, 4), (32, 3), (64, 2)])
+@pytest.mark.parametrize("bps", [2, 3, 4])
+def test_paged_decode_kernel_blocks_per_step(block, NB, bps):
+    """Multi-block grid steps (wider KV tiles over the scalar-prefetched
+    table) must be bit-identical to bps=1: sub-tiles accumulate in
+    ascending logical order, past-the-horizon sub-tiles are skipped via
+    the pos-derived ``live`` bound, and the padded tail when bps does not
+    divide NB is killed by the ``ki < nb`` guard."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, H, KV, dh = 3, 8, 4, 32
+    P = B * NB + 2
+    q = rand(ks[0], (B, H, dh), jnp.float32)
+    kp = rand(ks[1], (P, block, KV, dh), jnp.float32)
+    vp = rand(ks[2], (P, block, KV, dh), jnp.float32)
+    rng = np.random.default_rng(3)
+    bt = jnp.asarray(rng.permutation(np.arange(1, P))[:B * NB]
+                     .reshape(B, NB), jnp.int32)
+    # cover empty, mid-block, block-boundary and full horizons
+    pos = jnp.asarray([0, block * (NB // 2), NB * block - 1][:B], jnp.int32)
+    base = paged_decode_attention(q, kp, vp, pos, bt, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, pos, bt)
+    out = paged_decode_attention(q, kp, vp, pos, bt, blocks_per_step=bps,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # ring-window variant keeps the whole span live once wrapped
+    outw = paged_decode_attention(q, kp, vp, pos, bt, window=NB * block,
+                                  blocks_per_step=bps, interpret=True)
+    wantw = ref.paged_decode_attention_ref(q, kp, vp, pos, bt,
+                                           window=NB * block)
+    np.testing.assert_allclose(np.asarray(outw), np.asarray(wantw),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_paged_ref_equals_contiguous_gather():
     """The paged oracle over an identity block table IS the contiguous
     oracle — the indirection is pure layout."""
