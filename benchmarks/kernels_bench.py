@@ -78,6 +78,10 @@ def run(_settings=None):
     kp = jax.random.split(key, 3)
     qp = jax.random.normal(kp[0], (B, H, dh), jnp.float32)
     ppos = jnp.asarray([span - 1, span // 2, 7, 0][:B])
+    # jit the reference once: wrapping a fresh lambda per loop iteration
+    # defeats the trace cache and retraces every rep (repro-lint
+    # retrace-hazard)
+    jit_ref = jax.jit(ref.paged_decode_attention_ref)
     for block in (8, 16, 32):
         NB = span // block
         P = B * NB + 2
@@ -95,10 +99,8 @@ def run(_settings=None):
                                    a, b_, c_, p, t, blocks_per_step=n),
                                qp, kpool, vpool, ppos, bt), "interpret"))
         rows.append((f"paged_decode_b{block}_ref",
-                     _time(jax.jit(lambda a, b_, c_, p, t:
-                                   ref.paged_decode_attention_ref(
-                                       a, b_, c_, p, t)),
-                           qp, kpool, vpool, ppos, bt), "xla_cpu"))
+                     _time(jit_ref, qp, kpool, vpool, ppos, bt),
+                     "xla_cpu"))
 
     print("\n== Kernel microbenchmarks (CPU; kernels in interpret mode) ==")
     print("name,us_per_call,derived")

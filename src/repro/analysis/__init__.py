@@ -1,0 +1,14 @@
+"""Correctness tooling for the serving stack.
+
+* ``repro.analysis.lint`` — repro-lint, AST static analysis of the JAX
+  hot paths (rules: host-sync, retrace-hazard, kernel-bounds).  Run via
+  ``python -m repro.analysis <paths>``.
+* ``repro.analysis.sanitizer`` — PoolSanitizer, the debug-mode dynamic
+  checker that shadows the paged KV pool (enable with
+  ``EngineConfig(sanitize=True)`` / ``--sanitize``).
+
+See docs/analysis.md for the rule catalog and the incidents behind it.
+"""
+from repro.analysis.sanitizer import PoolSanitizer, PoolSanitizerError
+
+__all__ = ["PoolSanitizer", "PoolSanitizerError"]

@@ -1,0 +1,8 @@
+"""``python -m repro.analysis src/`` — run repro-lint, exit nonzero on
+unwaived findings."""
+import sys
+
+from repro.analysis.lint import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,477 @@
+"""repro-lint: AST static analysis specialized to this repo's JAX hot paths.
+
+Generic linters know nothing about the two failure modes that have actually
+bitten this codebase: host/device syncs hiding inside the serving step loop
+(PR 6 shipped a greedy-argmax fix for exactly this) and silent retraces /
+out-of-range Pallas block indices (PR 4's refcount-0 eviction aliasing was
+the dynamic cousin).  repro-lint encodes those incidents as machine checks:
+
+* ``host-sync``      — implicit truth-value / ``int()`` / ``float()`` /
+  ``.item()`` / ``np.asarray`` coercion of traced arrays inside jit-traced
+  functions, and implicit device syncs or eager ``jnp`` compute on the host
+  hot path (the ``_SlotTable`` step loop and friends).
+* ``retrace-hazard`` — Python-scalar derivation feeding array shapes,
+  ``jax.jit`` applied inside loops / hot functions (fresh trace per call),
+  unhashable (dict/list/set) static arguments.
+* ``kernel-bounds``  — Pallas ``BlockSpec`` index maps whose components
+  can't be shown in-range for the declared grid: unclamped index
+  arithmetic, or table-resolved (scalar-prefetch) physical indices without
+  a ``# repro: bounds`` annotation stating the out-of-band invariant.
+
+Directives (comments scanned from raw source; a directive on a line of its
+own also applies to the next line):
+
+* ``# repro: allow-<rule>``  — waive findings of ``<rule>`` on this line.
+* ``# repro: hot-path``      — mark the next ``def``/``class`` as a host
+  hot path (scanned like the built-in ``_SlotTable`` family).
+* ``# repro: jit``           — mark the next ``def`` as jit-traced even if
+  no in-module ``jax.jit`` wraps it (e.g. jitted by a caller elsewhere).
+* ``# repro: bounds <why>``  — assert an index-map bound that cannot be
+  shown statically (kernel-bounds reads these).
+
+Run ``python -m repro.analysis <paths>``; exits nonzero on any unwaived
+finding.  Pure stdlib — no jax import, safe to run anywhere.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = ("host-sync", "retrace-hazard", "kernel-bounds")
+
+# Classes whose methods form the serving host hot path: every method runs
+# between device dispatches of the step loop, so an implicit sync or eager
+# compute op here stalls the pipeline for all slots.
+HOT_CLASSES = {"_SlotTable", "SlotServer", "MixtureSlotServer",
+               "DecentralizedSlotServer"}
+
+# jnp ops that launch device compute when called eagerly from host code.
+# Constructors / uploads (asarray, zeros, arange, ...) are excluded: they
+# are how host state legitimately enters the device.  ``split`` is excluded
+# because admission-time pre-splitting of prefill chunks is a sanctioned
+# pattern (the chunks are consumed over many later steps).
+EAGER_OPS = {
+    "argmax", "argmin", "argsort", "sort", "max", "min", "sum", "mean",
+    "prod", "cumsum", "cumprod", "log", "exp", "sqrt", "tanh", "abs",
+    "maximum", "minimum", "clip", "where", "stack", "concatenate",
+    "take", "take_along_axis", "matmul", "dot", "einsum", "softmax",
+    "any", "all", "power", "add", "subtract", "multiply", "divide",
+}
+
+# Host-coercion callables: calling one of these on a device value forces a
+# blocking device->host transfer.
+COERCION_BUILTINS = {"int", "float", "bool", "complex"}
+COERCION_NP = {"asarray", "array"}          # np.asarray / np.array
+COERCION_METHODS = {"item", "tolist"}       # x.item() / x.tolist()
+
+# Shape-constructing jnp calls: a traced/tainted scalar flowing into one of
+# these retraces (or errors) per distinct value.
+SHAPE_CONSTRUCTORS = {"zeros", "ones", "full", "empty", "arange",
+                      "broadcast_to", "tile", "linspace", "eye"}
+
+_DIRECTIVE_RE = re.compile(r"#\s*repro:\s*(.+?)\s*$")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    msg: str
+    waived: bool = False
+
+    def format(self) -> str:
+        tag = " (waived)" if self.waived else ""
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}]{tag} " \
+               f"{self.msg}"
+
+
+class Directives:
+    """``# repro:`` comment directives, parsed from raw source lines."""
+
+    def __init__(self, lines: Sequence[str]):
+        self.allow: Dict[int, Set[str]] = {}       # line -> waived rules
+        self.marks: Dict[int, Set[str]] = {}       # line -> {hot-path, jit}
+        self.bounds: Dict[int, str] = {}           # line -> annotation text
+        for i, raw in enumerate(lines, start=1):
+            m = _DIRECTIVE_RE.search(raw)
+            if not m:
+                continue
+            body = m.group(1)
+            word, _, rest = body.partition(" ")
+            if word.startswith("allow-"):
+                self.allow.setdefault(i, set()).add(word[len("allow-"):])
+            elif word in ("hot-path", "jit"):
+                self.marks.setdefault(i, set()).add(word)
+            elif word == "bounds":
+                self.bounds[i] = rest.strip()
+
+    def waived(self, rule: str, line: int) -> bool:
+        """A finding is waived by a directive on its line or the line
+        directly above (comment-on-its-own-line style)."""
+        for ln in (line, line - 1):
+            if rule in self.allow.get(ln, ()):
+                return True
+        return False
+
+    def marked(self, mark: str, node: ast.AST) -> bool:
+        """``# repro: <mark>`` on the def/class line, a decorator line, or
+        the line directly above the first of those."""
+        first = min([node.lineno]
+                    + [d.lineno for d in getattr(node, "decorator_list",
+                                                 [])])
+        for ln in range(first - 1, getattr(node, "body", [node])[0].lineno):
+            if mark in self.marks.get(ln, ()):
+                return True
+        return False
+
+    def bounds_in_span(self, lo: int, hi: int) -> List[str]:
+        return [txt for ln, txt in self.bounds.items() if lo <= ln <= hi]
+
+
+# ---------------------------------------------------------------------------
+# expression predicates
+# ---------------------------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``jnp.argmax`` -> "jnp.argmax"; None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_device_get(call: ast.Call) -> bool:
+    name = dotted(call.func)
+    return name in ("jax.device_get", "jax.block_until_ready")
+
+
+def _device_op_root(name: Optional[str]) -> bool:
+    if not name:
+        return False
+    return (name.startswith("jnp.") or name.startswith("jax.numpy.")
+            or name.startswith("jax.lax.") or name.startswith("jax.nn.")
+            or name.startswith("jax.random."))
+
+
+def _eager_op_name(name: Optional[str]) -> Optional[str]:
+    """The op if ``name`` is an eager device compute call (jnp.argmax...)."""
+    if not name:
+        return None
+    for prefix in ("jnp.", "jax.numpy."):
+        if name.startswith(prefix):
+            op = name[len(prefix):]
+            if op in EAGER_OPS:
+                return op
+    return None
+
+
+#: Attribute accesses that are *static* under trace (and host ints/objects
+#: eagerly) — a name reached only through these carries no device value.
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def walk_opaque_device_get(node: ast.AST) -> Iterable[ast.AST]:
+    """ast.walk, but do not descend into ``jax.device_get(...)`` calls
+    (their results are host values — the sanctioned explicit sync) or
+    static attribute accesses (``x.shape[0]`` of a device array is a host
+    int, not a device value)."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, ast.Call) and _is_device_get(child):
+                continue
+            if isinstance(child, ast.Attribute) and \
+                    child.attr in STATIC_ATTRS:
+                continue
+            stack.append(child)
+
+
+def expr_taint(node: ast.AST, tainted: Set[str]) -> Optional[str]:
+    """Why this expression holds an eagerly-computed device value, or None.
+
+    Sources: a ``jnp.<EAGER_OPS>`` call anywhere inside (not shadowed by a
+    ``jax.device_get``), or a Name known to be tainted.
+    """
+    for n in walk_opaque_device_get(node):
+        if isinstance(n, ast.Call):
+            op = _eager_op_name(dotted(n.func))
+            if op is not None:
+                return f"jnp.{op}(...)"
+        if isinstance(n, ast.Name) and n.id in tainted:
+            return n.id
+    return None
+
+
+def _assign_targets(stmt: ast.stmt) -> List[str]:
+    names: List[str] = []
+
+    def collect(t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            names.append(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                collect(e)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            collect(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        collect(stmt.target)
+    return names
+
+
+def tainted_names(fn: ast.AST) -> Set[str]:
+    """Names in ``fn`` assigned (transitively) from device-op calls.
+
+    Assignment taints if the RHS contains any ``jnp.* / jax.lax.* /
+    jax.nn.* / jax.random.*`` call outside a ``jax.device_get`` — a
+    conservative 'this local lives on the device' marker.  Fixpoint over
+    name-to-name propagation.
+    """
+    taint: Set[str] = set()
+    stmts = [n for n in ast.walk(fn)
+             if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign))]
+    for _ in range(4):                       # small fixpoint
+        changed = False
+        for stmt in stmts:
+            value = stmt.value
+            if value is None:
+                continue
+            hit = False
+            for n in walk_opaque_device_get(value):
+                if isinstance(n, ast.Call) and \
+                        _device_op_root(dotted(n.func)):
+                    hit = True
+                    break
+                if isinstance(n, ast.Name) and n.id in taint:
+                    hit = True
+                    break
+            if hit:
+                for name in _assign_targets(stmt):
+                    if name not in taint:
+                        taint.add(name)
+                        changed = True
+        if not changed:
+            break
+    return taint
+
+
+# ---------------------------------------------------------------------------
+# module context: parse once, index jit-traced + hot-path functions
+# ---------------------------------------------------------------------------
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+class ModuleCtx:
+    def __init__(self, path: Path, src: str):
+        self.path = str(path)
+        self.src = src
+        self.lines = src.splitlines()
+        self.tree = ast.parse(src, filename=self.path)
+        self.directives = Directives(self.lines)
+        self.parent: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        self.funcs: List[ast.AST] = [
+            n for n in ast.walk(self.tree)
+            if isinstance(n, FuncNode + (ast.Lambda,))]
+        self._defs_by_name: Dict[str, List[ast.AST]] = {}
+        for n in self.funcs:
+            if isinstance(n, FuncNode):
+                self._defs_by_name.setdefault(n.name, []).append(n)
+        self.jit_traced: Set[ast.AST] = self._find_jit_traced()
+        self.hot: Set[ast.AST] = self._find_hot()
+
+    # -- indexing ----------------------------------------------------------
+
+    def _jit_decorated(self, fn: ast.AST) -> bool:
+        for dec in getattr(fn, "decorator_list", []):
+            name = dotted(dec)
+            if name in ("jax.jit", "jit"):
+                return True
+            if isinstance(dec, ast.Call):
+                cname = dotted(dec.func)
+                if cname in ("jax.jit", "jit"):
+                    return True
+                if cname in ("partial", "functools.partial") and dec.args \
+                        and dotted(dec.args[0]) in ("jax.jit", "jit"):
+                    return True
+        return False
+
+    def _find_jit_traced(self) -> Set[ast.AST]:
+        traced: Set[ast.AST] = set()
+        for fn in self.funcs:
+            if self._jit_decorated(fn):
+                traced.add(fn)
+            elif isinstance(fn, FuncNode) and \
+                    self.directives.marked("jit", fn):
+                traced.add(fn)
+        # jax.jit(<name>) / jax.jit(<lambda>) call sites
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and dotted(node.func) in ("jax.jit", "jit")
+                    and node.args):
+                continue
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                traced.add(target)
+            elif isinstance(target, ast.Name):
+                traced.update(self._defs_by_name.get(target.id, ()))
+            elif isinstance(target, ast.Call):   # jax.jit(partial(f, ...))
+                inner = dotted(target.func)
+                if inner in ("partial", "functools.partial") and \
+                        target.args and isinstance(target.args[0], ast.Name):
+                    traced.update(
+                        self._defs_by_name.get(target.args[0].id, ()))
+        # closure: helpers called by name from a traced function trace too
+        for _ in range(8):
+            grew = False
+            for fn in list(traced):
+                for n in ast.walk(fn):
+                    if isinstance(n, ast.Call) and \
+                            isinstance(n.func, ast.Name):
+                        for callee in self._defs_by_name.get(n.func.id, ()):
+                            if callee not in traced:
+                                traced.add(callee)
+                                grew = True
+            if not grew:
+                break
+        return traced
+
+    def _find_hot(self) -> Set[ast.AST]:
+        hot: Set[ast.AST] = set()
+        hot_classes = set(HOT_CLASSES)
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                bases = {dotted(b) for b in node.bases}
+                if node.name in hot_classes or bases & hot_classes or \
+                        self.directives.marked("hot-path", node):
+                    hot_classes.add(node.name)
+                    for item in node.body:
+                        if isinstance(item, FuncNode):
+                            hot.add(item)
+        for fn in self.funcs:
+            if isinstance(fn, FuncNode) and \
+                    self.directives.marked("hot-path", fn):
+                hot.add(fn)
+        # nested defs / lambdas inside a hot function run on the hot path
+        for _ in range(8):
+            grew = False
+            for fn in self.funcs:
+                if fn in hot:
+                    continue
+                p = self.parent.get(fn)
+                while p is not None:
+                    if p in hot:
+                        hot.add(fn)
+                        grew = True
+                        break
+                    p = self.parent.get(p)
+            if not grew:
+                break
+        return hot
+
+    # -- helpers for rules -------------------------------------------------
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        p = self.parent.get(node)
+        while p is not None:
+            if isinstance(p, FuncNode + (ast.Lambda,)):
+                return p
+            p = self.parent.get(p)
+        return None
+
+    def own_statements(self, fn: ast.AST) -> Iterable[ast.AST]:
+        """Walk ``fn`` without descending into nested def/lambda bodies
+        (those are scanned as their own functions)."""
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        stack: List[ast.AST] = list(body)
+        while stack:
+            n = stack.pop()
+            yield n
+            for child in ast.iter_child_nodes(n):
+                if isinstance(child, FuncNode + (ast.Lambda,)):
+                    continue
+                stack.append(child)
+
+    def in_loop(self, node: ast.AST) -> bool:
+        p = self.parent.get(node)
+        while p is not None and not isinstance(p, FuncNode + (ast.Lambda,)):
+            if isinstance(p, (ast.For, ast.While)):
+                return True
+            p = self.parent.get(p)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def iter_py(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def run_paths(paths: Sequence[str],
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    from repro.analysis.rules import RULE_CHECKS
+    selected = [(name, fn) for name, fn in RULE_CHECKS.items()
+                if rules is None or name in rules]
+    findings: List[Finding] = []
+    for path in iter_py(paths):
+        try:
+            src = path.read_text()
+            ctx = ModuleCtx(path, src)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding("parse", str(path), 1, 0,
+                                    f"could not parse: {e}"))
+            continue
+        for name, check in selected:
+            for f in check(ctx):
+                f.waived = ctx.directives.waived(f.rule, f.line)
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def main(argv: Sequence[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: JAX hot-path static analysis "
+                    "(host-sync, retrace-hazard, kernel-bounds)")
+    ap.add_argument("paths", nargs="+", help="files or directories")
+    ap.add_argument("--rule", action="append", choices=RULES, default=None,
+                    help="restrict to one rule (repeatable)")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="also print waived findings")
+    args = ap.parse_args(argv)
+
+    findings = run_paths(args.paths, rules=args.rule)
+    unwaived = [f for f in findings if not f.waived]
+    waived = [f for f in findings if f.waived]
+    for f in findings:
+        if not f.waived or args.show_waived:
+            print(f.format())
+    print(f"repro-lint: {len(unwaived)} finding(s), "
+          f"{len(waived)} waived")
+    return 1 if unwaived else 0

@@ -1,0 +1,10 @@
+"""repro-lint rules. Each module exposes RULE (name) and check(ctx)."""
+from repro.analysis.rules import host_sync, kernel_bounds, retrace_hazard
+
+RULE_CHECKS = {
+    host_sync.RULE: host_sync.check,
+    retrace_hazard.RULE: retrace_hazard.check,
+    kernel_bounds.RULE: kernel_bounds.check,
+}
+
+__all__ = ["RULE_CHECKS", "host_sync", "retrace_hazard", "kernel_bounds"]

@@ -1,0 +1,202 @@
+"""Rule ``host-sync`` — implicit device syncs where they stall the engine.
+
+Two scopes, two severities of mistake:
+
+* **jit-traced functions** (in-module ``jax.jit`` closure + ``# repro:
+  jit`` marks): any host coercion of a traced value is wrong — ``int()`` /
+  ``float()`` / ``bool()`` / ``.item()`` / ``.tolist()`` / ``np.asarray``
+  either errors at trace time (concretization) or silently burns a
+  constant into the trace.  ``jax.device_get`` under trace is flagged too.
+  Implicit truth-value tests (``if``/``while``/``assert``/``and``/``not``)
+  of jnp-derived values are the classic ConcretizationTypeError.
+
+* **host hot-path functions** (the ``_SlotTable`` serving family +
+  ``# repro: hot-path`` marks): the sanctioned pattern is ONE pre-jitted
+  dispatch then ONE explicit ``jax.device_get``.  What flags here is the
+  *implicit* sync — coercing an eagerly-computed device value (PR 6's
+  ``np.asarray(jnp.argmax(...))`` greedy fast path did exactly this) — and
+  eager ``jnp`` compute ops, each of which is an un-fused device dispatch
+  in the per-token loop.  ``jax.device_get`` is NOT flagged on the host:
+  it is the explicit sync point the fused step is built around, and
+  coercing its result (or the result of a known-jitted function) is free.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from repro.analysis.lint import (COERCION_BUILTINS, COERCION_METHODS,
+                                 COERCION_NP, Finding, ModuleCtx, dotted,
+                                 expr_taint, tainted_names,
+                                 walk_opaque_device_get)
+
+RULE = "host-sync"
+
+
+def _coercion_call(node: ast.Call) -> str:
+    """Name of the host-coercion this call performs, or ''. """
+    func = node.func
+    if isinstance(func, ast.Name) and func.id in COERCION_BUILTINS:
+        return func.id
+    name = dotted(func)
+    if name:
+        root, _, attr = name.rpartition(".")
+        if root in ("np", "numpy") and attr in COERCION_NP:
+            return name
+    if isinstance(func, ast.Attribute) and func.attr in COERCION_METHODS:
+        return f".{func.attr}()"
+    return ""
+
+
+def _truth_contexts(fn: ast.AST, ctx: ModuleCtx) -> Iterator[ast.AST]:
+    for n in ctx.own_statements(fn):
+        if isinstance(n, (ast.If, ast.While, ast.IfExp)):
+            yield n.test
+        elif isinstance(n, ast.Assert):
+            yield n.test
+        elif isinstance(n, ast.BoolOp):
+            for v in n.values:
+                yield v
+        elif isinstance(n, ast.UnaryOp) and isinstance(n.op, ast.Not):
+            yield n.operand
+
+
+def _item_method_on(node: ast.Call) -> bool:
+    return isinstance(node.func, ast.Attribute) and \
+        node.func.attr in COERCION_METHODS
+
+
+def check(ctx: ModuleCtx) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(RULE, ctx.path, node.lineno,
+                                node.col_offset, msg))
+
+    traced = ctx.jit_traced
+    hot_only = ctx.hot - traced
+
+    # ---- jit-traced scope ------------------------------------------------
+    for fn in traced:
+        taint: Set[str] = tainted_names(fn)
+        params = {a.arg for a in _args_of(fn)}
+
+        def coerced_traced(node: ast.AST) -> str:
+            """Taint reason when coercing ``node`` would concretize.
+
+            Shape/dtype access (``x.shape[0]``) is static under trace, so
+            only a *bare* param name (or a subscript of one) counts — not
+            any name buried in an attribute path.
+            """
+            why = expr_taint(node, taint)
+            if why:
+                return why
+            base = node
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Name) and base.id in params:
+                return base.id
+            return ""
+
+        for n in ctx.own_statements(fn):
+            if isinstance(n, ast.Call):
+                name = dotted(n.func)
+                if name == "jax.device_get":
+                    flag(n, "jax.device_get under jit trace: the value is "
+                            "abstract here — hoist the sync to the caller")
+                    continue
+                coercion = _coercion_call(n)
+                if coercion and (n.args or _item_method_on(n)):
+                    target = n.args[0] if n.args else n.func.value
+                    why = coerced_traced(target)
+                    if why:
+                        flag(n, f"{coercion} of traced value ({why}) "
+                                "inside a jit-traced function — "
+                                "concretization error or burned-in "
+                                "constant; compute it on the device or "
+                                "pass it in as a static")
+        # params with literal defaults are Python-level config flags
+        # (``log_space=False``): static at trace time, never device values
+        flag_params = _defaulted_params(fn)
+        for test in _truth_contexts(fn, ctx):
+            why = expr_taint(test, taint)
+            if not why and isinstance(test, ast.Name) and \
+                    test.id in params and test.id not in flag_params:
+                why = test.id
+            if why:
+                flag(test, f"implicit truth-value coercion of traced "
+                           f"value ({why}) in a jit-traced function — "
+                           "use jnp.where / lax.cond instead of Python "
+                           "control flow")
+
+    # ---- host hot-path scope --------------------------------------------
+    for fn in hot_only:
+        taint = tainted_names(fn)
+        # eager ops nested inside an already-flagged coercion are the same
+        # incident — report the coercion once, not its subexpressions too
+        coerced_subtrees: Set[int] = set()
+        for n in ctx.own_statements(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            op_why = expr_taint(n, set())
+            coercion = _coercion_call(n)
+            if coercion and (n.args or _item_method_on(n)):
+                target = n.args[0] if n.args else n.func.value
+                why = expr_taint(target, taint)
+                if why:
+                    flag(n, f"{coercion} of device value ({why}) on the "
+                            "host hot path — an implicit blocking sync "
+                            "per step; fold the compute into the jitted "
+                            "step and sync once via jax.device_get")
+                    coerced_subtrees.update(id(s) for s in ast.walk(target))
+                    continue
+            # eager device compute dispatched from the host loop
+            if op_why and op_why.startswith("jnp.") and \
+                    _is_direct_eager(n) and id(n) not in coerced_subtrees:
+                flag(n, f"eager {op_why[:-5]}(...) dispatch on the host "
+                        "hot path — each call is an un-fused device "
+                        "dispatch per step; move it into a pre-jitted "
+                        "function")
+        for test in _truth_contexts(fn, ctx):
+            why = expr_taint(test, taint)
+            if why:
+                flag(test, f"implicit truth-value coercion of device "
+                           f"value ({why}) on the host hot path — a "
+                           "blocking sync; jax.device_get it explicitly")
+
+    # dedupe (a nested eager op can be reached via two walks)
+    seen = set()
+    out = []
+    for f in findings:
+        key = (f.line, f.col, f.msg)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def _defaulted_params(fn: ast.AST):
+    """Param names with literal (Constant) defaults."""
+    a = fn.args
+    out = set()
+    pos = [*a.posonlyargs, *a.args]
+    for arg, dflt in zip(reversed(pos), reversed(a.defaults)):
+        if isinstance(dflt, ast.Constant):
+            out.add(arg.arg)
+    for arg, dflt in zip(a.kwonlyargs, a.kw_defaults):
+        if dflt is not None and isinstance(dflt, ast.Constant):
+            out.add(arg.arg)
+    return out
+
+
+def _args_of(fn: ast.AST):
+    a = fn.args
+    return [*a.posonlyargs, *a.args, *a.kwonlyargs] + \
+        ([a.vararg] if a.vararg else []) + ([a.kwarg] if a.kwarg else [])
+
+
+def _is_direct_eager(call: ast.Call) -> bool:
+    """True when this Call node itself is the eager jnp op (not merely an
+    ancestor expression containing one — those flag at their own node)."""
+    from repro.analysis.lint import _eager_op_name
+    return _eager_op_name(dotted(call.func)) is not None

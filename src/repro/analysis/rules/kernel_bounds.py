@@ -1,0 +1,171 @@
+"""Rule ``kernel-bounds`` — Pallas BlockSpec index maps must stay in-range.
+
+A BlockSpec index map turns grid coordinates (plus scalar-prefetch refs)
+into a block index per operand axis.  Pallas does not bounds-check it: an
+out-of-range index silently reads/writes the wrong pool block — the static
+cousin of PR 4's eviction-aliasing bug.  Two checks per index-map return
+component:
+
+* **KB1 unclamped arithmetic** — a component that *grows* a grid variable
+  (``*`` or ``+``) without a clamp (``jnp.minimum`` / ``jnp.clip`` / ``%``)
+  anywhere above it cannot be shown in-range for the declared grid.
+  Contracting ops (``//``, ``%``) pass: they only shrink the index (the
+  flash kernels' ``h // group`` GQA maps are the canonical negative).
+* **KB2 table-resolved index** — a component that subscripts a
+  scalar-prefetch ref (``bt_r[b, ki]``) resolves through runtime data; its
+  bound is a *pool invariant* the AST cannot see.  These require a
+  ``# repro: bounds <why>`` annotation in the enclosing function naming
+  the ref — the reviewer-visible statement of the invariant (e.g. "the
+  allocator only hands out ids < pool size and unallocated rows are masked
+  to the reserved scratch block").
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.lint import Finding, ModuleCtx, dotted
+
+RULE = "kernel-bounds"
+
+_CLAMPS = {"jnp.minimum", "jnp.clip", "jax.numpy.minimum",
+           "jax.numpy.clip", "min", "pl.cdiv"}
+
+
+def _blockspec_calls(ctx: ModuleCtx) -> Iterator[ast.Call]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name and name.split(".")[-1] == "BlockSpec":
+                yield node
+
+
+def _index_map_of(call: ast.Call, ctx: ModuleCtx) -> Optional[ast.AST]:
+    """The index-map callable of a BlockSpec call: a lambda / local def
+    passed positionally or as ``index_map=``."""
+    cands: List[ast.AST] = list(call.args)
+    cands += [kw.value for kw in call.keywords if kw.arg == "index_map"]
+    for c in cands:
+        if isinstance(c, ast.Lambda):
+            return c
+        if isinstance(c, ast.Name):
+            # a def in the same enclosing function (the repo's idiom:
+            # ``def imap(...)`` next to the pl.BlockSpec call)
+            scope = ctx.enclosing_function(call)
+            while scope is not None:
+                for n in ast.walk(scope):
+                    if isinstance(n, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)) and \
+                            n.name == c.id:
+                        return n
+                scope = ctx.enclosing_function(scope)
+            for n in ctx._defs_by_name.get(c.id, ()):
+                return n
+    return None
+
+
+def _params_of(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def _return_components(fn: ast.AST) -> Iterator[ast.AST]:
+    if isinstance(fn, ast.Lambda):
+        body = fn.body
+        elems = body.elts if isinstance(body, ast.Tuple) else [body]
+        yield from elems
+        return
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Return) and n.value is not None:
+            v = n.value
+            yield from (v.elts if isinstance(v, ast.Tuple) else [v])
+
+
+def _has_clamp_above(node: ast.AST, parents) -> bool:
+    p = parents.get(node)
+    while p is not None:
+        if isinstance(p, ast.Call) and dotted(p.func) in _CLAMPS:
+            return True
+        if isinstance(p, ast.BinOp) and isinstance(p.op, ast.Mod):
+            return True
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+            break
+        p = parents.get(p)
+    return False
+
+
+def _growing_binops(node: ast.AST,
+                    grid: Set[str]) -> Iterator[ast.BinOp]:
+    """Outermost Mult/Add chains over a grid variable: ``i * bps + 1`` is
+    ONE unclamped expression, not an Add finding plus a Mult finding —
+    a matched chain is yielded whole and not descended into."""
+    if isinstance(node, ast.BinOp) and \
+            isinstance(node.op, (ast.Mult, ast.Add)):
+        for leaf in ast.walk(node):
+            if isinstance(leaf, ast.Name) and leaf.id in grid:
+                yield node
+                return
+    for child in ast.iter_child_nodes(node):
+        yield from _growing_binops(child, grid)
+
+
+def check(ctx: ModuleCtx) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(RULE, ctx.path, node.lineno,
+                                node.col_offset, msg))
+
+    for spec in _blockspec_calls(ctx):
+        imap = _index_map_of(spec, ctx)
+        if imap is None:
+            continue
+        params = set(_params_of(imap))
+        seen_binops: Set[ast.BinOp] = set()
+
+        # KB1 — scan the whole imap body (components may be built through
+        # local assignments like ``ki = kc * bps + j``)
+        body_nodes = [imap.body] if isinstance(imap, ast.Lambda) \
+            else imap.body
+        for stmt in body_nodes:
+            for binop in _growing_binops(stmt, params):
+                if binop in seen_binops:
+                    continue
+                seen_binops.add(binop)
+                if not _has_clamp_above(binop, ctx.parent):
+                    flag(binop, "unclamped index arithmetic over a grid "
+                                "variable in a BlockSpec index map — the "
+                                "result cannot be shown in-range for the "
+                                "declared grid; clamp with jnp.minimum("
+                                "..., bound - 1) (Pallas does not bounds-"
+                                "check block indices)")
+
+        # KB2 — table-resolved components need a bounds annotation
+        for comp in _return_components(imap):
+            for n in ast.walk(comp):
+                if not isinstance(n, ast.Subscript):
+                    continue
+                base = n.value
+                if isinstance(base, ast.Name) and base.id in params:
+                    lo, hi = _annotation_span(ctx, spec, imap)
+                    notes = ctx.directives.bounds_in_span(lo, hi)
+                    if not any(base.id in t for t in notes):
+                        flag(n, f"index map resolves through prefetch "
+                                f"ref '{base.id}' — its values are "
+                                "runtime data whose bound the AST cannot "
+                                "see; add '# repro: bounds ...' naming "
+                                f"'{base.id}' and the invariant that "
+                                "keeps it < the operand's leading dim")
+
+    return findings
+
+
+def _annotation_span(ctx: ModuleCtx, spec: ast.Call,
+                     imap: ast.AST) -> Tuple[int, int]:
+    """Lines where a ``# repro: bounds`` note counts: the enclosing
+    function of the BlockSpec (or the module slice around it)."""
+    scope = ctx.enclosing_function(spec) or ctx.enclosing_function(imap)
+    if scope is not None and hasattr(scope, "end_lineno"):
+        return scope.lineno, scope.end_lineno
+    return max(1, spec.lineno - 20), spec.lineno + 20

@@ -1,0 +1,179 @@
+"""Rule ``retrace-hazard`` — patterns that recompile per call or per value.
+
+The serving stack only stays single-dispatch because every jitted function
+is traced a *bounded* number of times (the repo's idioms: pow-of-2 stop
+widths, ``_nb_live`` capped at ``nb_slot``).  Three hazards break that:
+
+* **RT1 value-dependent shape** — a host scalar derived from device values
+  (``int(jnp.sum(mask))``) flowing into a shape-constructing call
+  (``jnp.zeros(n)``): a fresh shape — and a fresh trace of every consumer
+  — per distinct value.
+* **RT2 unhashable static args** — ``jax.jit(..., static_argnums=...)``
+  fed a dict/list/set at the static position: either a TypeError
+  (unhashable) or, with custom hashables, a silent cache miss per call.
+* **RT3 jit-under-loop** — ``jax.jit(...)`` applied inside a loop or a
+  hot-path function: each call wraps a fresh function object, so the trace
+  cache never hits and every call pays a full retrace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.lint import (SHAPE_CONSTRUCTORS, Finding, ModuleCtx,
+                                 dotted, expr_taint, tainted_names)
+
+RULE = "retrace-hazard"
+
+_COERCERS = {"int", "float"}
+_MUTABLE_CALLS = {"dict", "list", "set"}
+
+
+def _is_shape_constructor(name: Optional[str]) -> bool:
+    if not name:
+        return False
+    for prefix in ("jnp.", "jax.numpy."):
+        if name.startswith(prefix) and \
+                name[len(prefix):] in SHAPE_CONSTRUCTORS:
+            return True
+    return False
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Dict, ast.List, ast.Set, ast.DictComp,
+                         ast.ListComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _MUTABLE_CALLS:
+        return True
+    return False
+
+
+def _static_positions(jit_call: ast.Call):
+    """(set of static positions, set of static names) from a jax.jit call."""
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in jit_call.keywords:
+        val = kw.value
+        items = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+            else [val]
+        if kw.arg == "static_argnums":
+            for it in items:
+                if isinstance(it, ast.Constant) and \
+                        isinstance(it.value, int):
+                    nums.add(it.value)
+        elif kw.arg == "static_argnames":
+            for it in items:
+                if isinstance(it, ast.Constant) and \
+                        isinstance(it.value, str):
+                    names.add(it.value)
+    return nums, names
+
+
+def check(ctx: ModuleCtx) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(RULE, ctx.path, node.lineno,
+                                node.col_offset, msg))
+
+    # ---- RT1: tainted scalars flowing into shape constructors ------------
+    # (an empty taint set still matters: expr_taint recognizes a direct
+    # device-op argument like int(jnp.sum(x)) without any named taint)
+    for fn in ctx.funcs:
+        taint = tainted_names(fn)
+        for n in ctx.own_statements(fn):
+            if not (isinstance(n, ast.Call)
+                    and _is_shape_constructor(dotted(n.func))):
+                continue
+            shape_args = list(n.args[:1]) + \
+                [kw.value for kw in n.keywords if kw.arg == "shape"]
+            for arg in shape_args:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Call) and \
+                            isinstance(sub.func, ast.Name) and \
+                            sub.func.id in _COERCERS and sub.args:
+                        why = expr_taint(sub.args[0], taint)
+                        if why:
+                            flag(n, "value-dependent shape: "
+                                    f"{sub.func.id}() of device value "
+                                    f"({why}) feeds a shape constructor "
+                                    "— a fresh shape (and a retrace of "
+                                    "every jitted consumer) per distinct "
+                                    "value; pad to a bounded set of "
+                                    "shapes instead")
+
+    # ---- RT2: unhashable static args -------------------------------------
+    # map: name bound from `x = jax.jit(f, static_argnums/argnames=...)`
+    jitted_statics: Dict[str, tuple] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Call) and \
+                dotted(node.value.func) in ("jax.jit", "jit"):
+            nums, names = _static_positions(node.value)
+            if not (nums or names):
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    jitted_statics[t.id] = (nums, names, node.value)
+            # mutable default on the wrapped def at a static position
+            if node.value.args and \
+                    isinstance(node.value.args[0], ast.Name):
+                for d in ctx._defs_by_name.get(node.value.args[0].id, ()):
+                    all_args = d.args.posonlyargs + d.args.args
+                    defaults = d.args.defaults
+                    offset = len(all_args) - len(defaults)
+                    for i, dflt in enumerate(defaults):
+                        pos = offset + i
+                        if (pos in nums or
+                                all_args[pos].arg in names) and \
+                                _is_mutable_literal(dflt):
+                            flag(dflt, "mutable default for static arg "
+                                       f"'{all_args[pos].arg}' of a "
+                                       "jitted function — unhashable, "
+                                       "TypeError at first call; use a "
+                                       "tuple/frozenset")
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in jitted_statics):
+            continue
+        nums, names, _ = jitted_statics[node.func.id]
+        for i, arg in enumerate(node.args):
+            if i in nums and _is_mutable_literal(arg):
+                flag(arg, f"dict/list/set passed at static position {i} "
+                          f"of jitted '{node.func.id}' — unhashable "
+                          "static arg: TypeError, or a cache miss (full "
+                          "retrace) per call if made hashable; pass a "
+                          "tuple/frozenset")
+        for kw in node.keywords:
+            if kw.arg in names and _is_mutable_literal(kw.value):
+                flag(kw.value, f"dict/list/set passed as static arg "
+                               f"'{kw.arg}' of jitted '{node.func.id}' "
+                               "— unhashable static arg; pass a "
+                               "tuple/frozenset")
+
+    # ---- RT3: jax.jit applied per-call -----------------------------------
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and dotted(node.func) in ("jax.jit", "jit")):
+            continue
+        enclosing = ctx.enclosing_function(node)
+        in_loop = ctx.in_loop(node)
+        hot = enclosing is not None and enclosing in ctx.hot and \
+            not _is_setup_method(enclosing)
+        if in_loop or hot:
+            where = "inside a loop" if in_loop else \
+                "in a hot-path function"
+            flag(node, f"jax.jit applied {where}: each call wraps a "
+                       "fresh function object, so the trace cache never "
+                       "hits and every call retraces; jit once at setup "
+                       "and reuse the wrapped function")
+    return findings
+
+
+def _is_setup_method(fn: ast.AST) -> bool:
+    """__init__ / make_* factories legitimately build jitted closures."""
+    name = getattr(fn, "name", "")
+    return name == "__init__" or name.startswith("make_") or \
+        name.startswith("_make_") or name.startswith("_build")

@@ -270,6 +270,11 @@ def chunk_prefill_attention(q: Array, k_pool: Array, v_pool: Array,
 
     def kv_spec(j):
         def imap(h, kc, start_r, bt_r):
+            # repro: bounds bt_r holds pool block ids < P (the pool's
+            # leading dim) — the allocator only writes ids it owns and
+            # masks unallocated table rows to the reserved scratch block
+            # 0; ki is clamped to NB - 1 above, so bt_r[ki] never reads
+            # past the table
             ki = jnp.minimum(jnp.minimum(kc * bps + j,
                                          (start_r[0] + C - 1) // block),
                              NB - 1)
@@ -341,11 +346,17 @@ def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
     def kv_spec(j):
         if window <= 0:
             def imap(b, h, kc, pos_r, bt_r):
+                # repro: bounds bt_r holds pool block ids < P (the
+                # pool's leading dim) — allocator invariant; ki is
+                # clamped to NB - 1, so bt_r[b, ki] stays in-table
                 ki = jnp.minimum(jnp.minimum(kc * bps + j,
                                              pos_r[b] // block), NB - 1)
                 return (bt_r[b, ki], 0, h, 0)
         else:
             def imap(b, h, kc, pos_r, bt_r):
+                # repro: bounds bt_r holds pool block ids < P (the
+                # pool's leading dim) — allocator invariant; ki is
+                # clamped to NB - 1, so bt_r[b, ki] stays in-table
                 ki = jnp.minimum(kc * bps + j, NB - 1)
                 return (bt_r[b, ki], 0, h, 0)
         return pl.BlockSpec((1, block, 1, dh), imap)

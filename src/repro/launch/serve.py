@@ -97,6 +97,11 @@ def main() -> None:
                     help="drive the incremental add_request/step API and "
                          "print per-token deltas as they decode "
                          "(slot engine)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug mode: run the PoolSanitizer — a per-step "
+                         "ownership scan over the paged block pool "
+                         "(aliasing, refcount drift, leaks, use-after-"
+                         "free raise immediately; needs --paged)")
     ap.add_argument("--no-fused-step", action="store_true",
                     help="run the legacy host epilogue instead of the fused "
                          "single-dispatch decode step (parity escape hatch; "
@@ -139,7 +144,7 @@ def main() -> None:
             page_block=args.page_block, pool_blocks=args.pool_blocks,
             chunked_prefill=args.chunked_prefill, chunk=args.prefill_chunk,
             token_budget=args.token_budget, prefix_cache=args.prefix_cache,
-            fused_step=not args.no_fused_step,
+            fused_step=not args.no_fused_step, sanitize=args.sanitize,
             use_kernel=args.use_kernel, strategy=args.strategy)
         ecfg.validate(model)
         server = make_engine(model, experts=experts, router=router,

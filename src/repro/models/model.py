@@ -66,7 +66,7 @@ def scan_layers(body, carry, xs, cfg: ModelConfig):
     L = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(L):
-        layer = jax.tree.map(lambda a: a[i], xs)
+        layer = jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = body(carry, layer)
         ys.append(y)
     if all(y is None for y in ys):

@@ -141,6 +141,9 @@ class EngineConfig:
     prefix_cache: bool = False
     # -- fused single-dispatch decode step (PR 6)
     fused_step: bool = True       # False → legacy host epilogue (parity ref)
+    # -- PoolSanitizer (PR 7): debug-mode per-step ownership scan over the
+    #    paged pool (repro.analysis.sanitizer); violations raise
+    sanitize: bool = False
     # -- misc
     use_kernel: bool = False
     strategy: str = "top1"        # decentralized engines: "top1" | "mixture"
@@ -183,6 +186,10 @@ class EngineConfig:
                 "the prefix cache shares prompt KV through the paged pool "
                 "and fills misses with chunked prefill — enable paging "
                 "(page_block > 0) and chunked prefill (chunk > 0)")
+        if self.sanitize and not self.paged:
+            raise ValueError(
+                "sanitize=True runs the PoolSanitizer, which shadows the "
+                "paged KV block pool — enable paging (page_block > 0)")
         if self.strategy not in ("top1", "mixture"):
             raise ValueError(
                 f"strategy must be 'top1' or 'mixture', got "

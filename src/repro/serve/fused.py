@@ -35,8 +35,8 @@ import jax.numpy as jnp
 
 from repro.core.ensemble import PROB_FLOOR
 
-__all__ = ["DONE_REASONS", "decode_epilogue", "pick_first", "sample_tokens",
-           "_sample_tokens"]
+__all__ = ["DONE_REASONS", "argmax_tokens", "decode_epilogue", "pick_first",
+           "sample_tokens", "sample_tokens_probs", "_sample_tokens"]
 
 #: ``done`` bitmap code → finish reason (0 means "keep decoding").
 DONE_REASONS = {1: "stop", 2: "length", 3: "truncated"}
@@ -68,6 +68,24 @@ def _sample_tokens(scores, temps, top_ks, seeds, counts):
 
 
 sample_tokens = jax.jit(_sample_tokens)
+
+
+def _sample_tokens_probs(probs, temps, top_ks, seeds, counts):
+    """``sample_tokens`` over Eq. 27 mixture *probabilities*: the floor +
+    log transform runs inside the same dispatch, so callers holding probs
+    (the stacked mixture core) pay no eager ``jnp.log`` on the host path."""
+    return _sample_tokens(jnp.log(jnp.maximum(probs, PROB_FLOOR)),
+                          temps, top_ks, seeds, counts)
+
+
+sample_tokens_probs = jax.jit(_sample_tokens_probs)
+
+#: Greedy next-token pick as ONE jitted dispatch — the all-greedy fast path
+#: of ``_SlotTable._next_tokens``. The eager ``jnp.argmax`` it replaces was
+#: an un-fused device dispatch (and implicit sync) per step on the host
+#: side of the legacy epilogue (the PR 6 incident repro-lint now flags).
+argmax_tokens = jax.jit(
+    lambda scores: jnp.argmax(scores, axis=-1).astype(jnp.int32))
 
 
 def pick_first(row, temp, top_k, seed, *, from_probs: bool = False):

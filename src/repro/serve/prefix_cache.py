@@ -45,7 +45,8 @@ from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from typing import Any, Dict, Hashable, List, Optional
+from types import MappingProxyType
+from typing import Any, Dict, Hashable, List, Mapping, Optional
 
 import numpy as np
 
@@ -121,6 +122,20 @@ class PrefixCache:
     @property
     def n_evictable(self) -> int:
         return len(self._lru)
+
+    @property
+    def refcounts(self) -> Mapping[int, int]:
+        """Read-only ``block -> refcount`` view over every cache-tracked
+        block — the PoolSanitizer's contract for cross-checking slot
+        tables against cache ownership without reaching into the tree."""
+        return MappingProxyType(self._ref)
+
+    @property
+    def evictable_blocks(self) -> Mapping[int, None]:
+        """Read-only view of the LRU set (refcount-0 blocks, oldest
+        first). The conservation invariant the sanitizer enforces:
+        a block is here if and only if its refcount is 0."""
+        return MappingProxyType(self._lru)
 
     def match(self, keys: List[Hashable], width: int) -> List[int]:
         """Longest cached run of full-block keys, capped so at least one

@@ -99,14 +99,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizer import PoolSanitizer
 from repro.core.ensemble import (PROB_FLOOR, make_stacked_chunk_fns,
                                  make_stacked_fused, make_stacked_serving,
                                  mix_expert_logits)
 from repro.models.model import Model
 from repro.serve.api import (EngineConfig, RequestOutput, SamplingParams,
                              TokenDelta, effective_page_block, stop_id_row)
-from repro.serve.fused import (DONE_REASONS, _sample_tokens, decode_epilogue,
-                               pick_first, sample_tokens)
+from repro.serve.fused import (DONE_REASONS, _sample_tokens, argmax_tokens,
+                               decode_epilogue, pick_first, sample_tokens,
+                               sample_tokens_probs)
 from repro.serve.prefix_cache import PrefixCache, block_keys
 
 Array = jnp.ndarray
@@ -244,6 +246,13 @@ class BlockAllocator:
     errors: once blocks are refcounted and shared (the prefix cache), a
     bookkeeping slip would otherwise hand the same physical block to two
     live requests and corrupt both silently.
+
+    Every block also carries a generation counter, bumped when it is
+    freed: a holder that stamped the generation at reservation can prove
+    its ``(slot, block)`` reference is still live (``assert_live``) — a
+    stale reference held across a free/realloc raises a use-after-free
+    instead of silently aliasing the block's new owner (the failure shape
+    of PR 4's refcount-0 eviction bug).
     """
 
     def __init__(self, n_blocks: int):
@@ -253,6 +262,7 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self._free = list(range(n_blocks - 1, 0, -1))   # pop() → low ids
         self._free_set = set(self._free)
+        self.gen = [0] * n_blocks       # bumped at free() per block
 
     @property
     def n_free(self) -> int:
@@ -280,6 +290,21 @@ class BlockAllocator:
                     f"list; block refcount bookkeeping is corrupt")
         self._free.extend(blocks)
         self._free_set.update(blocks)
+        for b in blocks:
+            self.gen[b] += 1
+
+    def assert_live(self, block: int, gen: int, *, owner: str = "") -> None:
+        """Raise unless ``block`` is still in the allocation generation the
+        holder stamped at reservation — i.e. it has NOT been freed (and
+        possibly reissued) since. ``owner`` names the holder in the
+        error."""
+        cur = self.gen[block]
+        if cur != gen:
+            who = f" held by {owner}" if owner else ""
+            raise ValueError(
+                f"use-after-free: block {block}{who} was freed since its "
+                f"reservation (generation {cur} != held {gen}) — the "
+                "reference is stale and may alias the block's new owner")
 
 
 class _SlotTable:
@@ -295,7 +320,8 @@ class _SlotTable:
 
     def __init__(self, n_slots: int, cache_len: int, *, block_size: int = 0,
                  n_blocks: int = 0, window: int = 0, chunk: int = 0,
-                 token_budget: int = 0, prefix_cache: bool = False):
+                 token_budget: int = 0, prefix_cache: bool = False,
+                 sanitize: bool = False):
         self.n_slots, self.cache_len = n_slots, cache_len
         self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -346,12 +372,20 @@ class _SlotTable:
             self.allocator = BlockAllocator(n_blocks)
             self.block_tables = np.zeros((n_slots, self.nb_slot), np.int32)
             self.n_alloc = np.zeros(n_slots, dtype=np.int32)
+            # allocation generation of each mapped entry (use-after-free
+            # detection: checked against allocator.gen at release and by
+            # the PoolSanitizer's per-step scan)
+            self.block_gens = np.zeros((n_slots, self.nb_slot), np.int64)
         self.prefix: Optional[PrefixCache] = None
         if prefix_cache:
             # flag combinations were vetted by EngineConfig.validate();
             # reaching here with prefix on means paged + chunked are too
             assert self.paged and self.chunked, (block_size, chunk)
             self.prefix = PrefixCache(self.allocator, block_size)
+        # debug-mode dynamic checker over the paged pool (EngineConfig.
+        # sanitize / --sanitize): shadows every step with an ownership scan
+        self.sanitizer: Optional[PoolSanitizer] = \
+            PoolSanitizer(self) if sanitize and self.paged else None
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -433,7 +467,11 @@ class _SlotTable:
         self._admit_waiting()
         finished = self._drain_admit_retired()
         if self.active:
+            if self.sanitizer is not None:
+                self.sanitizer.begin_step()
             finished += self._decode_step()
+            if self.sanitizer is not None:
+                self.sanitizer.check_step()
         outs = [self._output(r) for r in finished]
         for req in (self.slot_req[s] for s in range(self.n_slots)):
             if req is not None and req.emitted < len(req.out):
@@ -464,6 +502,9 @@ class _SlotTable:
                 self.prefill_base[slot] = 0
                 self.prefill_width[slot] = 0
             self._release(slot)
+            if self.sanitizer is not None:
+                # an aborted request must leave zero leaked blocks behind
+                self.sanitizer.check_pool()
             return self._finish_aborted(req)
         return None
 
@@ -597,6 +638,7 @@ class _SlotTable:
             self.block_tables[slot, :len(shared)] = shared
             self.block_tables[slot, len(shared):need] = blocks
             self.n_alloc[slot] = need
+            self._stamp_gens(slot, 0, need)
             self._tables_dirty = True    # only the table changed
             return True
         blocks = self._alloc_blocks(need - have)
@@ -604,12 +646,21 @@ class _SlotTable:
             return False
         self.block_tables[slot, have:need] = blocks
         self.n_alloc[slot] = need
+        self._stamp_gens(slot, have, need)
         # growth changes the table and NOTHING else — patch st["tables"]
         # instead of tearing down the whole device state (mid-decode growth
         # fires every page_block steps; a full rebuild there costs more
         # than the dispatch it feeds)
         self._tables_dirty = True
         return True
+
+    def _stamp_gens(self, slot: int, lo: int, hi: int) -> None:
+        """Record the allocation generation of newly mapped table entries
+        [lo, hi) — the use-after-free witness ``_release`` (and the
+        PoolSanitizer) check against ``allocator.gen``."""
+        gen = self.allocator.gen
+        for i in range(lo, hi):
+            self.block_gens[slot, i] = gen[int(self.block_tables[slot, i])]
 
     def _grow_active(self) -> None:
         """Before a lockstep decode step: make sure every decoding slot
@@ -643,6 +694,14 @@ class _SlotTable:
             n = int(self.n_alloc[slot])
             if n:
                 blocks = self.block_tables[slot, :n].tolist()
+                # use-after-free check: every block this slot is about to
+                # return must still be in the generation it reserved — a
+                # mismatch means something freed (and possibly reissued)
+                # it behind the table's back
+                for i, b in enumerate(blocks):
+                    self.allocator.assert_live(
+                        b, int(self.block_gens[slot, i]),
+                        owner=f"slot {slot} entry {i}")
                 if self.prefix is not None:
                     # cache-tracked blocks stay resident (shared or LRU-
                     # evictable); only untracked ones return to the free
@@ -652,6 +711,7 @@ class _SlotTable:
                 if blocks:
                     self.allocator.free(blocks)
             self.block_tables[slot, :] = 0
+            self.block_gens[slot, :] = 0
             self.n_alloc[slot] = 0
 
     def _retire_at_admission(self, req: Request, first_tok: int) -> None:
@@ -871,10 +931,13 @@ class _SlotTable:
         paths (greedy rows take the argmax inside ``sample_tokens``) — the
         eager ``jnp.argmax`` this replaces cost a separate device sync per
         admitted request. The chunked path avoids even this dispatch: its
-        pick is fused into the final chunk's step (``pick_first``)."""
-        if from_probs:
-            row = jnp.log(jnp.maximum(row, PROB_FLOOR))
-        return int(sample_tokens(
+        pick is fused into the final chunk's step (``pick_first``).
+        Probability rows route through ``sample_tokens_probs`` so the
+        floor + log transform rides the same dispatch — the eager
+        ``jnp.log`` it replaces was a host-path dispatch repro-lint
+        flags."""
+        fn = sample_tokens_probs if from_probs else sample_tokens
+        return int(fn(
             row[None], jnp.asarray([req.temperature], jnp.float32),
             jnp.asarray([req.top_k], jnp.int32),
             jnp.asarray([req.seed & 0xFFFFFFFF], jnp.uint32),
@@ -882,14 +945,17 @@ class _SlotTable:
 
     def _next_tokens(self, scores, *, from_probs: bool = False) -> np.ndarray:
         """Next token per slot from the lockstep dispatch's (n_slots, V)
-        scores. All-greedy steps keep the plain argmax; any sampled slot
-        routes the whole step through the jitted seeded sampler (greedy
-        rows still take their argmax inside it)."""
+        scores. All-greedy steps take the jitted argmax fast path
+        (``argmax_tokens`` — the eager ``jnp.argmax`` it replaces was an
+        un-fused dispatch + implicit sync per step, the PR 6 incident
+        repro-lint's host-sync rule now catches); any sampled slot routes
+        the whole step through the jitted seeded sampler (greedy rows
+        still take their argmax inside it, probability rows fold the
+        floor + log into the same dispatch)."""
         dec = self.decoding
         if all(self.slot_req[s].temperature <= 0 for s in dec):
-            return np.asarray(jnp.argmax(scores, axis=-1), dtype=np.int32)
-        if from_probs:
-            scores = jnp.log(jnp.maximum(scores, PROB_FLOOR))
+            return np.asarray(argmax_tokens(scores), dtype=np.int32)
+        fn = sample_tokens_probs if from_probs else sample_tokens
         temps = np.zeros(self.n_slots, np.float32)
         top_ks = np.zeros(self.n_slots, np.int32)
         seeds = np.zeros(self.n_slots, np.uint32)
@@ -900,7 +966,7 @@ class _SlotTable:
             # & wraps negative seeds into uint32 range (NumPy 2.x raises
             # on out-of-bounds assignment instead of wrapping)
             seeds[s], counts[s] = r.seed & 0xFFFFFFFF, len(r.out)
-        return np.asarray(sample_tokens(
+        return np.asarray(fn(
             scores, jnp.asarray(temps), jnp.asarray(top_ks),
             jnp.asarray(seeds), jnp.asarray(counts)), dtype=np.int32)
 
@@ -921,6 +987,8 @@ class _SlotTable:
             out["pool_blocks"] = self.allocator.n_blocks
         if self.prefix is not None:
             out.update(self.prefix.stats())
+        if self.sanitizer is not None:
+            out.update(self.sanitizer.stats())
         return out
 
     # ------------------------------------------------------------------
@@ -1303,7 +1371,8 @@ class SlotServer(_SlotTable):
                          window=model.cfg.sliding_window, chunk=chunk,
                          token_budget=config.token_budget,
                          prefix_cache=config.prefix_cache
-                         and model.prefix_cacheable)
+                         and model.prefix_cacheable,
+                         sanitize=config.sanitize)
         self.model, self.params = model, params
         self.use_kernel = use_kernel
         if self.paged:
@@ -1456,7 +1525,8 @@ class MixtureSlotServer(_SlotTable):
                          window=model.cfg.sliding_window, chunk=chunk,
                          token_budget=config.token_budget,
                          prefix_cache=config.prefix_cache
-                         and model.prefix_cacheable)
+                         and model.prefix_cacheable,
+                         sanitize=config.sanitize)
         self._seq_axis = 2      # embedded prompts carry K at axis 0
         self._from_probs = True  # the mixed scores are Eq. 27 probabilities
         self._needs_features = True   # admission routes on features
@@ -1521,14 +1591,19 @@ class MixtureSlotServer(_SlotTable):
                     req, slot, width,
                     lambda b: self._prep_all(self.stacked, b)):
                 return False
-            w = self.router.route(jnp.asarray(req.features[None]))
-            self.weights[slot] = np.asarray(w[0])
+            # device_get is the explicit sync for the host weights mirror
+            # — np.asarray of the device row was an implicit one (repro-
+            # lint host-sync)
+            w = jax.device_get(
+                self.router.route(jnp.asarray(req.features[None])))
+            self.weights[slot] = w[0]
             return True
         if not self._admission_precheck(req, slot, width):
             return False
         # route only once admission is paying for the prefill — a request
         # blocked on free KV blocks must not re-run the router every retry
-        w = self.router.route(jnp.asarray(req.features[None]))    # (1, K)
+        w = jax.device_get(
+            self.router.route(jnp.asarray(req.features[None])))   # (1, K)
         logits, row_cache = self._prefill_all(self.stacked, req.batch())
         probs = self._mix(logits[:, :, -1], w)                    # (1, V)
         first = self._pick_first(req, probs[0], from_probs=True)
@@ -1536,7 +1611,7 @@ class MixtureSlotServer(_SlotTable):
         if width == self.cache_len:
             self._retire_at_admission(req, first)
             return True
-        self.weights[slot] = np.asarray(w[0])
+        self.weights[slot] = w[0]
         self._admit_prefilled(slot, req, first, width, row_cache)
         return True
 

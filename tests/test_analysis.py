@@ -1,0 +1,320 @@
+"""repro-lint rule tests: true positives, true negatives, waivers.
+
+Every fixture is a small source file written to ``tmp_path`` and run
+through the real ``run_paths`` pipeline — the same path ``python -m
+repro.analysis`` takes — so directive parsing, hot/jit scope detection
+and waiver bookkeeping are all exercised, not just the rule callbacks.
+The true-positive fixtures for host-sync and retrace-hazard are the
+regression shapes named in docs/analysis.md: PR 6's greedy-argmax host
+sync and the jit-in-a-loop retrace storm.
+"""
+import textwrap
+from pathlib import Path
+
+from repro.analysis.lint import main as lint_main
+from repro.analysis.lint import run_paths
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint(tmp_path, src, rules=None, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return run_paths([str(p)], rules)
+
+
+def unwaived(findings):
+    return [f for f in findings if not f.waived]
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_flags_pr6_greedy_argmax(tmp_path):
+    """The exact PR 6 incident shape: a hot-class step loop coercing an
+    eagerly-computed device argmax — an implicit blocking sync per token."""
+    fs = lint(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+
+        class _SlotTable:
+            def _next_tokens(self, scores):
+                return np.asarray(jnp.argmax(scores, -1))
+    """, rules=["host-sync"])
+    assert len(unwaived(fs)) == 1
+    assert "host path" in fs[0].msg or "host hot path" in fs[0].msg
+    assert fs[0].line == 7
+
+
+def test_host_sync_flags_eager_dispatch_in_marked_fn(tmp_path):
+    fs = lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def poll(scores):  # repro: hot-path
+            probs = jnp.log(scores)
+            return probs
+    """, rules=["host-sync"])
+    assert len(unwaived(fs)) == 1
+    assert "eager" in fs[0].msg
+
+
+def test_host_sync_flags_truth_test_under_jit(tmp_path):
+    fs = lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if jnp.any(x):
+                return x
+            return -x
+    """, rules=["host-sync"])
+    assert len(unwaived(fs)) == 1
+    assert "truth-value" in fs[0].msg
+
+
+def test_host_sync_flags_int_coercion_under_jit(tmp_path):
+    fs = lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            n = int(jnp.sum(x))
+            return jnp.zeros((4,)) + n
+    """, rules=["host-sync"])
+    assert any("int" in f.msg and "traced" in f.msg for f in unwaived(fs))
+
+
+def test_host_sync_clean_on_sanctioned_device_get(tmp_path):
+    """The fused-step contract: one jitted dispatch, one explicit
+    jax.device_get, then free host coercion of the fetched value."""
+    fs = lint(tmp_path, """
+        import jax
+        import numpy as np
+
+        class _SlotTable:
+            def _decode_step(self):
+                toks = jax.device_get(self._fstep(self.state))
+                return int(np.asarray(toks)[0])
+    """, rules=["host-sync"])
+    assert unwaived(fs) == []
+
+
+def test_host_sync_clean_outside_hot_scope(tmp_path):
+    """The same eager coercion in an unmarked, non-serving class is not a
+    hot-path bug — scope detection keeps the rule quiet there."""
+    fs = lint(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+
+        class OfflineEval:
+            def best(self, scores):
+                return np.asarray(jnp.argmax(scores, -1))
+    """, rules=["host-sync"])
+    assert unwaived(fs) == []
+
+
+def test_host_sync_static_flag_param_not_flagged(tmp_path):
+    """A literal-defaulted keyword flag is static under trace — branching
+    on it is ordinary Python config, not a concretization hazard."""
+    fs = lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def mix(logits, log_space=False):
+            if log_space:
+                return jnp.exp(logits)
+            return logits
+    """, rules=["host-sync"])
+    assert unwaived(fs) == []
+
+
+def test_host_sync_waiver(tmp_path):
+    fs = lint(tmp_path, """
+        import numpy as np
+        import jax.numpy as jnp
+
+        class _SlotTable:
+            def _next_tokens(self, scores):
+                # repro: allow-host-sync
+                return np.asarray(jnp.argmax(scores, -1))
+    """, rules=["host-sync"])
+    assert len(fs) == 1 and fs[0].waived
+    assert unwaived(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+def test_retrace_flags_jit_in_loop(tmp_path):
+    fs = lint(tmp_path, """
+        import jax
+
+        def bench(fns, x):
+            outs = []
+            for fn in fns:
+                outs.append(jax.jit(lambda a: fn(a))(x))
+            return outs
+    """, rules=["retrace-hazard"])
+    assert len(unwaived(fs)) == 1
+    assert "loop" in fs[0].msg
+
+
+def test_retrace_flags_traced_shape_derivation(tmp_path):
+    fs = lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def pad(x):
+            return jnp.zeros(int(jnp.sum(x)))
+    """, rules=["retrace-hazard"])
+    assert len(unwaived(fs)) == 1
+
+
+def test_retrace_flags_mutable_static_arg(tmp_path):
+    fs = lint(tmp_path, """
+        import jax
+
+        def f(x, opts):
+            return x
+
+        g = jax.jit(f, static_argnums=(1,))
+
+        def call(x):
+            return g(x, {"mode": "fast"})
+    """, rules=["retrace-hazard"])
+    assert len(unwaived(fs)) >= 1
+    assert any("static" in f.msg for f in fs)
+
+
+def test_retrace_clean_on_setup_jit(tmp_path):
+    """jit at construction time (the sanctioned make_*-fns pattern) is the
+    fix for the hazard, not an instance of it."""
+    fs = lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def __init__(self, model):
+                self._step = jax.jit(model.decode_step)
+
+        def make_serve_fns(model):
+            return jax.jit(model.prefill), jax.jit(model.decode_step)
+    """, rules=["retrace-hazard"])
+    assert unwaived(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-bounds
+# ---------------------------------------------------------------------------
+
+def test_kernel_bounds_flags_unclamped_growth(tmp_path):
+    fs = lint(tmp_path, """
+        import jax.experimental.pallas as pl
+
+        def make_spec(bps):
+            return pl.BlockSpec((1, 8), lambda i, j: (i * bps + 1, 0))
+    """, rules=["kernel-bounds"])
+    assert len(unwaived(fs)) == 1
+
+
+def test_kernel_bounds_clean_on_clamped_growth(tmp_path):
+    fs = lint(tmp_path, """
+        import jax.numpy as jnp
+        import jax.experimental.pallas as pl
+
+        def make_spec(bps, nb):
+            return pl.BlockSpec(
+                (1, 8), lambda i, j: (jnp.minimum(i * bps + j, nb - 1), 0))
+    """, rules=["kernel-bounds"])
+    assert unwaived(fs) == []
+
+
+def test_kernel_bounds_clean_on_contracting_floordiv(tmp_path):
+    """h // g never exceeds h — the flash kernels' head-group maps pass
+    without annotation."""
+    fs = lint(tmp_path, """
+        import jax.experimental.pallas as pl
+
+        def make_spec(g):
+            return pl.BlockSpec((1, 8), lambda h, i: (h // g, 0))
+    """, rules=["kernel-bounds"])
+    assert unwaived(fs) == []
+
+
+def test_kernel_bounds_prefetch_ref_needs_annotation(tmp_path):
+    src_unannotated = """
+        import jax.experimental.pallas as pl
+
+        def make_spec():
+            def imap(b, kc, bt_r):
+                return (bt_r[b, kc], 0)
+            return pl.BlockSpec((1, 8), imap)
+    """
+    fs = lint(tmp_path, src_unannotated, rules=["kernel-bounds"])
+    assert len(unwaived(fs)) == 1
+    assert "bt_r" in fs[0].msg
+
+    src_annotated = """
+        import jax.experimental.pallas as pl
+
+        def make_spec():
+            def imap(b, kc, bt_r):
+                # repro: bounds bt_r holds pool ids < the pool's leading
+                # dim (allocator invariant)
+                return (bt_r[b, kc], 0)
+            return pl.BlockSpec((1, 8), imap)
+    """
+    fs = lint(tmp_path, src_annotated, rules=["kernel-bounds"],
+              name="annotated.py")
+    assert unwaived(fs) == []
+
+
+def test_kernel_bounds_waiver(tmp_path):
+    fs = lint(tmp_path, """
+        import jax.experimental.pallas as pl
+
+        def make_spec(bps):
+            # repro: allow-kernel-bounds
+            return pl.BlockSpec((1, 8), lambda i, j: (i * bps + 1, 0))
+    """, rules=["kernel-bounds"])
+    assert len(fs) == 1 and fs[0].waived
+
+
+# ---------------------------------------------------------------------------
+# runner + merged-tree acceptance
+# ---------------------------------------------------------------------------
+
+def test_main_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import numpy as np
+        import jax.numpy as jnp
+
+        class _SlotTable:
+            def f(self, s):
+                return np.asarray(jnp.argmax(s))
+    """))
+    assert lint_main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[host-sync]" in out and "1 finding(s)" in out
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint_main([str(good)]) == 0
+
+
+def test_merged_tree_is_clean():
+    """The acceptance bar: zero unwaived findings over src/ and
+    benchmarks/, and zero waivers at all inside the serving hot path."""
+    fs = run_paths([str(REPO / "src"), str(REPO / "benchmarks")])
+    bad = [f.format() for f in fs if not f.waived]
+    assert bad == [], "\n".join(bad)
+    serve_waivers = [f.format() for f in fs
+                     if f.waived and "serve" in str(f.path)]
+    assert serve_waivers == [], "\n".join(serve_waivers)
+    for p in (REPO / "src" / "repro" / "serve").glob("*.py"):
+        assert "repro: allow-" not in p.read_text(), \
+            f"waiver comment in hot-path module {p}"

@@ -103,8 +103,9 @@ def test_bwd_kernel_matches_jnp_reference_directly():
                                          causal=causal, window=window,
                                          block_q=32, block_k=32,
                                          interpret=True)
-        _, vjp = jax.vjp(lambda a, b, c: ref.flash_attention_ref(
-            a, b, c, causal=causal, window=window), q, k, v)
+        _, vjp = jax.vjp(lambda a, b, c, causal=causal, window=window:
+                         ref.flash_attention_ref(a, b, c, causal=causal,
+                                                 window=window), q, k, v)
         rq, rk, rv = vjp(do)
         np.testing.assert_allclose(np.asarray(dq), np.asarray(rq),
                                    rtol=2e-4, atol=2e-4)

@@ -1,0 +1,259 @@
+"""PoolSanitizer dynamic checks: clean runs, fault injection, and the
+BlockAllocator generation counters.
+
+Fault-injection tests corrupt a live server's block bookkeeping the same
+way the historical bugs did (PR 4's refcount-0 eviction aliasing, leaked
+blocks at abort, write-aliasing across slots) and assert the sanitizer
+names the offending slot/block. The clean-run test doubles as the
+observation-only contract: sanitized serving must be token-for-token
+identical to plain serving.
+
+All tests carry the ``sanitize`` marker — the CI analysis job runs them
+with ``pytest -m sanitize``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import PoolSanitizer, PoolSanitizerError
+from repro.configs.base import get_smoke_config
+from repro.models import build_model
+from repro.serve.api import EngineConfig, SamplingParams
+from repro.serve.scheduler import (BlockAllocator, Request, SlotServer,
+                                   make_chunk_fns, make_fused_fns,
+                                   make_serve_fns)
+
+pytestmark = pytest.mark.sanitize
+
+CACHE_LEN, BLOCK, CHUNK = 32, 8, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    fns = {
+        "serve_fns": make_serve_fns(model, CACHE_LEN, paged=True),
+        "fused_fns": make_fused_fns(model, CACHE_LEN, paged=True),
+    }
+    cfns = {
+        "serve_fns": fns["serve_fns"],
+        "chunk_fns": make_chunk_fns(model, CACHE_LEN, CHUNK, paged=True),
+        "fused_fns": make_fused_fns(model, CACHE_LEN, CHUNK, paged=True),
+    }
+    return cfg, model, params, fns, cfns
+
+
+def prompt(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+
+
+def paged_server(model, params, fns, *, sanitize=True, n_slots=2):
+    return SlotServer(model, params, **fns, config=EngineConfig(
+        n_slots=n_slots, cache_len=CACHE_LEN, paged=True, page_block=BLOCK,
+        sanitize=sanitize))
+
+
+def prefix_server(model, params, cfns, *, sanitize=True, n_slots=3):
+    return SlotServer(model, params, **cfns, config=EngineConfig(
+        n_slots=n_slots, cache_len=CACHE_LEN, paged=True, page_block=BLOCK,
+        chunked_prefill=True, chunk=CHUNK, prefix_cache=True,
+        sanitize=sanitize))
+
+
+def steps_until(srv, pred, limit=30):
+    for _ in range(limit):
+        if pred():
+            return
+        srv.step()
+    raise AssertionError("server never reached the expected state")
+
+
+# ---------------------------------------------------------------------------
+# clean runs: observation-only, counters exposed
+# ---------------------------------------------------------------------------
+
+def test_clean_run_parity_and_counters(setup):
+    cfg, model, params, _, cfns = setup
+    queue = lambda: [Request(i, prompt(cfg, n, i), m) for i, (n, m)
+                     in enumerate(zip((7, 12, 16, 9), (6, 4, 8, 5)))]
+    plain = prefix_server(model, params, cfns, sanitize=False)
+    assert plain.sanitizer is None
+    want = plain.serve(queue())
+
+    san = prefix_server(model, params, cfns, sanitize=True)
+    assert isinstance(san.sanitizer, PoolSanitizer)
+    got = san.serve(queue())
+    assert got == want, "sanitized serving diverged from plain"
+
+    st = san.stats()
+    assert st["sanitize_checked_steps"] > 0
+    assert st["sanitize_violations"] == 0
+    # after full retirement the only non-free blocks are the cache-
+    # resident (refcount-0, LRU-evictable) prefix blocks
+    assert st["sanitize_owned_blocks"] == len(san.prefix._ref)
+    # the stats surface is additive: the usual serving counters remain
+    assert "pool_free_blocks" in st and "active" in st
+
+
+def test_sanitize_requires_paged(setup):
+    with pytest.raises(ValueError, match="paging"):
+        EngineConfig(n_slots=2, cache_len=32, sanitize=True).validate()
+
+    class NotPaged:
+        paged = False
+    with pytest.raises(ValueError, match="paged"):
+        PoolSanitizer(NotPaged())
+
+
+# ---------------------------------------------------------------------------
+# fault injection: each historical bug shape must be named
+# ---------------------------------------------------------------------------
+
+def test_duplicate_block_across_slots(setup):
+    """The write-aliasing shape: one physical block mapped writable into
+    two slots without a prefix-cache refcount."""
+    cfg, model, params, fns, _ = setup
+    srv = paged_server(model, params, fns)
+    srv.add_request(prompt(cfg, 12, 1), SamplingParams(max_new=8), rid=0)
+    srv.add_request(prompt(cfg, 12, 2), SamplingParams(max_new=8), rid=1)
+    steps_until(srv, lambda: len(srv.decoding) == 2)
+
+    s1, s2 = sorted(srv.decoding)[:2]
+    pb = int(srv.block_tables[s1, 0])
+    srv.block_tables[s2, 0] = pb
+    srv.block_gens[s2, 0] = srv.allocator.gen[pb]
+    with pytest.raises(PoolSanitizerError,
+                       match=f"block {pb} mapped writable into 2 slots"):
+        srv.sanitizer.check_pool()
+
+
+def test_decode_write_into_cached_block(setup):
+    """Cached blocks are immutable — a decode write re-routed into one
+    would corrupt every future prefix hit."""
+    cfg, model, params, _, cfns = setup
+    srv = prefix_server(model, params, cfns)
+    warm = prompt(cfg, 16, 3)
+    srv.serve([Request(100, warm, 1)])            # 2 full blocks cached
+    tracked_pb = next(iter(srv.prefix._ref))
+
+    srv.add_request(prompt(cfg, 12, 4), SamplingParams(max_new=8), rid=0)
+    steps_until(srv, lambda: 0 in srv.decoding
+                and int(srv.pos[0]) % BLOCK not in (0,))
+    slot = 0
+    lb = srv.sanitizer._logical_block(int(srv.pos[slot]))
+    assert lb < int(srv.n_alloc[slot])
+    srv.block_tables[slot, lb] = tracked_pb
+    srv.block_gens[slot, lb] = srv.allocator.gen[tracked_pb]
+
+    srv.sanitizer.begin_step()
+    with pytest.raises(PoolSanitizerError,
+                       match=f"cache-tracked block {tracked_pb}"):
+        srv.sanitizer.check_step()
+
+
+def test_chunk_write_into_shared_prefix_block(setup):
+    """A prefill chunk steered into a refcount>1 block: the matched run is
+    read-only; prefill must start past it."""
+    cfg, model, params, _, cfns = setup
+    srv = prefix_server(model, params, cfns)
+    shared = prompt(cfg, 16, 5)
+    srv.serve([Request(100, shared, 1)])          # warm the radix tree
+    srv.add_request(shared, SamplingParams(max_new=16), rid=0)
+    srv.add_request(shared, SamplingParams(max_new=16), rid=1)
+    steps_until(srv, lambda: len(srv.decoding) == 2)
+    pb = next(b for b, r in srv.prefix._ref.items() if r >= 2)
+
+    # a third request mid-prefill on a DIFFERENT prompt; fake its next
+    # chunk's block reservation as the shared block
+    srv.add_request(prompt(cfg, 16, 6), SamplingParams(max_new=4), rid=2)
+    steps_until(srv, lambda: bool(srv.prefill_order)
+                and int(srv.prefill_pos[srv.prefill_order[0]]) >= CHUNK)
+    slot = srv.prefill_order[0]
+    lb = int(srv.prefill_pos[slot]) // BLOCK
+    srv.block_tables[slot, lb] = pb
+    srv.block_gens[slot, lb] = srv.allocator.gen[pb]
+    srv.n_alloc[slot] = max(int(srv.n_alloc[slot]), lb + 1)
+    srv.prefix.acquire([pb])                      # keep refcount == holders
+
+    srv.sanitizer.begin_step()
+    with pytest.raises(PoolSanitizerError,
+                       match=f"shared prefix block {pb}"):
+        srv.sanitizer.check_step()
+
+
+def test_leak_at_abort(setup):
+    """A slot whose accounting forgets its blocks leaks them from the pool
+    — caught at the abort boundary, with the block ids named."""
+    cfg, model, params, fns, _ = setup
+    srv = paged_server(model, params, fns)
+    srv.add_request(prompt(cfg, 12, 7), SamplingParams(max_new=8), rid=0)
+    steps_until(srv, lambda: 0 in srv.decoding)
+    held = srv.block_tables[0, :int(srv.n_alloc[0])].tolist()
+    srv.n_alloc[0] = 0                            # "forget" the reservation
+    with pytest.raises(PoolSanitizerError, match="leaked block"):
+        srv.abort(0)
+    msg_blocks = held
+    assert msg_blocks                              # blocks really were held
+
+
+def test_pr4_refcount0_eviction_aliasing(setup):
+    """The PR 4 regression fixture: a cached block a live request still
+    maps must never sit on the LRU list, where pool pressure could evict
+    and reissue it."""
+    cfg, model, params, _, cfns = setup
+    srv = prefix_server(model, params, cfns)
+    shared = prompt(cfg, 16, 8)
+    srv.serve([Request(100, shared, 1)])
+    srv.add_request(shared, SamplingParams(max_new=8), rid=0)
+    steps_until(srv, lambda: 0 in srv.decoding)
+    pb = next(b for b, r in srv.prefix._ref.items() if r >= 1)
+    assert pb not in srv.prefix._lru               # invariant before injection
+    srv.prefix._lru[pb] = None                     # re-create the PR 4 state
+    with pytest.raises(PoolSanitizerError, match="PR 4 aliasing bug"):
+        srv.sanitizer.check_pool()
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator generation counters (use-after-free)
+# ---------------------------------------------------------------------------
+
+def test_allocator_generation_counters():
+    alloc = BlockAllocator(8)
+    (b,) = alloc.alloc(1)
+    g = alloc.gen[b]
+    alloc.assert_live(b, g)                        # live: no raise
+    alloc.free([b])
+    with pytest.raises(ValueError, match=f"use-after-free: block {b}"):
+        alloc.assert_live(b, g, owner="slot 0 entry 0")
+    # reissue: the new holder stamps the bumped generation and is live
+    (b2,) = alloc.alloc(1)
+    assert b2 == b and alloc.gen[b2] == g + 1
+    alloc.assert_live(b2, alloc.gen[b2])
+
+
+def test_use_after_free_caught_at_release(setup):
+    """The production guard (independent of sanitize=True): releasing a
+    slot whose block was freed behind the table's back raises instead of
+    double-freeing / aliasing the block's new owner."""
+    cfg, model, params, fns, _ = setup
+    srv = paged_server(model, params, fns, sanitize=False)
+    srv.add_request(prompt(cfg, 12, 9), SamplingParams(max_new=8), rid=0)
+    steps_until(srv, lambda: 0 in srv.decoding)
+    b = int(srv.block_tables[0, 0])
+    srv.allocator.free([b])                        # stale table reference
+    with pytest.raises(ValueError, match=f"use-after-free: block {b}"):
+        srv.abort(0)
+
+
+def test_use_after_free_caught_by_sanitizer(setup):
+    cfg, model, params, fns, _ = setup
+    srv = paged_server(model, params, fns)
+    srv.add_request(prompt(cfg, 12, 10), SamplingParams(max_new=8), rid=0)
+    steps_until(srv, lambda: 0 in srv.decoding)
+    b = int(srv.block_tables[0, 0])
+    srv.allocator.free([b])
+    with pytest.raises(PoolSanitizerError, match="use-after-free"):
+        srv.sanitizer.check_pool()
