@@ -78,6 +78,9 @@ INVARIANTS = [
     # ...and the per-step ownership scan reports zero violations on the
     # production configuration (a violation here is a real pool bug)
     ("serve_sanitize", "sanitize_clean"),
+    # speculation is a latency lever, never a sampling change: greedy AND
+    # seeded-sampled outputs are token-for-token identical with it on
+    ("serve_speculative", "spec_parity"),
 ]
 
 INFORMATIONAL = [
@@ -99,6 +102,13 @@ INFORMATIONAL = [
     # is documented in docs/analysis.md, not gated here)
     ("serve_sanitize", "sanitize_overhead_ratio"),
     ("serve_sanitize", "sanitized_tok_per_s"),
+    # speculative acceptance + wall-clock: workload- and machine-
+    # dependent (the CPU interpret path understates the dispatch-latency
+    # win the L-position verify buys), so recorded but never gated
+    ("serve_speculative", "spec_tokens_per_step"),
+    ("serve_speculative", "spec_accept_rate"),
+    ("serve_speculative", "spec_over_vanilla"),
+    ("serve_speculative", "spec_tok_per_s"),
 ]
 
 

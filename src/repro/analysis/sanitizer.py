@@ -12,8 +12,10 @@ Enabled via ``EngineConfig(sanitize=True)`` / ``--sanitize``, the
 sanitizer shadows ``_SlotTable`` around every dispatch:
 
 * ``begin_step``  — records the step's write *plan*: one decode write per
-  decoding slot at its current position, plus the scheduled prefill
-  chunk's position span (replaying the scheduler's own chunk admission
+  decoding slot at each position of its step span (vanilla steps write
+  one position; a speculative step writes ``_SlotTable._step_span ==
+  spec_len`` candidate positions), plus the scheduled prefill chunk's
+  position span (replaying the scheduler's own chunk admission
   decision).
 * ``check_step``  — resolves the plan through the (post-growth) block
   tables and asserts: every write lands in an owned, non-scratch block;
@@ -76,19 +78,29 @@ class PoolSanitizer:
         t = self.table
         tracked = t.prefix.refcounts if t.prefix is not None else {}
         decode_writes: Set[int] = set()
+        span = int(getattr(t, "_step_span", 1))
+        s_log = t.nb_slot * t.block_size
         for slot, rid, pos in self._decode_plan:
             req = t.slot_req[slot]
             if req is None or req.rid != rid:
                 continue            # retired this step; blocks already freed
-            lb = self._logical_block(pos)
-            pb = self._owned_entry(slot, rid, lb, pos, kind="decode write")
-            if pb in tracked:
-                self._violate(
-                    f"slot {slot} (request {rid}) decode write at position "
-                    f"{pos} lands in cache-tracked block {pb} (refcount "
-                    f"{tracked[pb]}) — cached blocks are immutable; this "
-                    "write would corrupt every future prefix hit")
-            decode_writes.add(pb)
+            for p in range(pos, pos + span):
+                if not t.ring and p >= s_log:
+                    # a speculative span past the logical capacity writes
+                    # the scratch block by construction (the verify scatter
+                    # routes out-of-horizon positions there)
+                    continue
+                lb = self._logical_block(p)
+                pb = self._owned_entry(slot, rid, lb, p,
+                                       kind="decode write")
+                if pb in tracked:
+                    self._violate(
+                        f"slot {slot} (request {rid}) decode write at "
+                        f"position {p} lands in cache-tracked block {pb} "
+                        f"(refcount {tracked[pb]}) — cached blocks are "
+                        "immutable; this write would corrupt every future "
+                        "prefix hit")
+                decode_writes.add(pb)
         if self._chunk_plan is not None:
             slot, rid, start, length = self._chunk_plan
             req = t.slot_req[slot]

@@ -280,6 +280,72 @@ def make_stacked_fused(model, param_axes, cache_len: int, *,
     return jax.jit(step), jax.jit(step_chunk), jax.jit(chunk_only)
 
 
+def make_stacked_verify(model, param_axes, cache_len: int, spec_len: int, *,
+                        use_kernel: bool = False, expert_draft: bool = True):
+    """Speculative verify step for the stacked mixture core: score all
+    ``spec_len`` candidate positions with the Eq. 27 mixture and accept
+    the longest prefix matching the vanilla trajectory — one jitted
+    dispatch, same contract as ``Model.fused_verify_step``
+    (``state["weights"]`` carries the router weights, as in
+    ``make_stacked_fused``).
+
+    With ``expert_draft=True`` the drafts are SELF-generated on device:
+    the draft model is the stacked params at expert index 0, sliced
+    axes-aware inside the jit (a gather, free under XLA). Its KV trail is
+    equally free: every expert writes its own cache slice during mixture
+    decode/verify, so the expert-0 slice of the SHARED caches already
+    holds expert-0's keys for every committed position — no separate
+    draft cache to maintain, no catch-up forward. The draft loop runs
+    ``spec_len - 1`` sequential greedy expert-0 ``decode_step_paged``
+    micro-steps on a locally-threaded copy of that slice, then DISCARDS
+    it: the vmapped verify re-scatters all K experts' K/V at every span
+    position, so the draft's tentative writes never touch the real pool.
+    Returns a jitted ``verify(stacked, caches, state)`` →
+    ``(caches, state, toks, n_emit, done)``.
+
+    With ``expert_draft=False`` the drafts arrive as an argument (the
+    scheduler's host-side n-gram proposer):
+    ``verify(stacked, caches, state, drafts)`` with the same outputs.
+    """
+    # function-level import: serve.fused imports PROB_FLOOR from here
+    from repro.serve.fused import verify_epilogue
+    cache_axes = stacked_cache_axes(model.cache_shapes(1, cache_len))
+
+    def verify_core(stacked_p, caches, st, drafts):
+        tokens = jnp.concatenate([st["tok"][:, None], drafts], axis=1)
+        logits, caches = jax.vmap(
+            lambda p, c: model.verify_step_paged(
+                p, c, tokens, st["pos"], st["tables"],
+                use_kernel=use_kernel),
+            in_axes=(param_axes, cache_axes),
+            out_axes=(0, cache_axes))(stacked_p, caches)  # (K, B, L, V)
+        probs = mix_expert_logits(logits, st["weights"][:, None, :])
+        st, toks, n_emit, done = verify_epilogue(
+            probs, drafts, st, cache_len=cache_len, from_probs=True)
+        return caches, st, toks, n_emit, done
+
+    if not expert_draft:
+        return jax.jit(verify_core)
+
+    def verify(stacked_p, caches, st):
+        draft_p = jax.tree.map(lambda leaf, ax: jnp.take(leaf, 0, axis=ax),
+                               stacked_p, param_axes)
+        draft_c = jax.tree.map(lambda leaf, ax: jnp.take(leaf, 0, axis=ax),
+                               caches, cache_axes)
+        tok = st["tok"]
+        drafts = []
+        for j in range(spec_len - 1):
+            logits, draft_c = model.decode_step_paged(
+                draft_p, draft_c, tok, st["pos"] + j, st["tables"],
+                use_kernel=use_kernel)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            drafts.append(tok)
+        drafts = jnp.stack(drafts, axis=1)               # (B, L-1)
+        return verify_core(stacked_p, caches, st, drafts)
+
+    return jax.jit(verify)
+
+
 def select_expert_params(stacked_params, expert_idx: Array):
     """Top-1 fast path: gather one expert's parameter slice out of a pytree
     whose leaves carry a leading K dim. With the expert axis sharded over the

@@ -313,6 +313,144 @@ def chunk_prefill_attention(q: Array, k_pool: Array, v_pool: Array,
                          (1, 0, 2, 3)).reshape(C, H, dh)
 
 
+def _paged_verify_kernel(pos_ref, bt_ref, q_ref, *refs,
+                         scale: float, block: int, group: int, L: int,
+                         bps: int, nb: int):
+    """Speculative span verify over PAGED blocks — the chunk-prefill body
+    batched over slots.
+
+    Rows are one slot's (ℓ, group) query pairs flattened ℓ-major; row r is
+    the candidate at absolute position ``pos[b] + r // group``. ``ki`` is
+    the LOGICAL block index — the physical indirection happened in the
+    scalar-prefetched index maps, with the same ``blocks_per_step``
+    sub-tiling as the paged decode kernel. The span's own K/V were
+    scattered into the pool before the call, so the single fence
+    ``key position ≤ pos + row offset`` covers the committed prefix AND
+    within-span causality; rejected-tail keys at later offsets are hidden
+    from every accepted row by the same rule.
+    """
+    k_refs, v_refs = refs[:bps], refs[bps:2 * bps]
+    o_ref = refs[2 * bps]
+    m_scr, l_scr, acc_scr = refs[2 * bps + 1:]
+    b = pl.program_id(0)
+    kc = pl.program_id(2)
+    nkc = pl.num_programs(2)
+
+    @pl.when(kc == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+    for j in range(bps):
+        ki = kc * bps + j
+        # blocks entirely above the span's LAST position are dead for
+        # every row; the ``ki < nb`` guard kills the padded tail
+        live = (ki * block <= pos + (L - 1)) & (ki < nb)
+
+        @pl.when(live)
+        def _accum(j=j, ki=ki):
+            q = q_ref[0, 0, :, :].astype(jnp.float32)    # (L·group, dh)
+            k = k_refs[j][0, :, 0, :].astype(jnp.float32)  # (block, dh)
+            v = v_refs[j][0, :, 0, :].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale
+            rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+            cols = ki * block + \
+                jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= pos + rows, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_scr[...] = alpha * l_scr[...] + \
+                jnp.sum(p, axis=-1, keepdims=True)
+            acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
+
+    @pl.when(kc == nkc - 1)
+    def _done():
+        o_ref[0, 0, :, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_verify_attention(q: Array, k_pool: Array, v_pool: Array,
+                           pos: Array, block_tables: Array, *,
+                           blocks_per_step: int = 1,
+                           interpret: bool = False) -> Array:
+    """q: (B,L,H,dh) span queries (row ℓ of slot b sits at absolute
+    position ``pos[b] + ℓ``, its K/V already scattered into the pool);
+    k_pool,v_pool: (P,block,KV,dh); pos: (B,) int32; block_tables: (B,NB)
+    int32 → (B,L,H,dh).
+
+    Grid = (batch, kv_heads, ⌈NB / blocks_per_step⌉), one (L·group, dh)
+    query tile per slot per KV head (span offsets ride the sublane axis
+    next to the GQA group, exactly like the chunk-prefill kernel's rows).
+    ``pos`` and the block tables are scalar-prefetch operands; each of the
+    ``blocks_per_step`` K/V sub-tiles is its own operand whose index map
+    clamps the fetched logical index to the span's horizon block
+    ``(pos + L - 1) // block`` — dead blocks alias the horizon block and
+    the DMA revisit rule elides the fetch. Sliding-window (ring) caches
+    are not supported: the scheduler only routes windowless models here.
+    """
+    B, L, H, dh = q.shape
+    P, block, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    NB = block_tables.shape[1]
+    assert H % KV == 0
+    group = H // KV
+    scale = 1.0 / (dh ** 0.5)
+    bps = max(1, min(blocks_per_step, NB))
+    nkc = -(-NB // bps)
+    # rows flattened ℓ-major per slot per KV head: (B, KV, L·group, dh)
+    qg = jnp.transpose(q.reshape(B, L, KV, group, dh), (0, 2, 1, 3, 4)) \
+        .reshape(B, KV, L * group, dh)
+
+    def kv_spec(j):
+        def imap(b, h, kc, pos_r, bt_r):
+            # repro: bounds bt_r holds pool block ids < P (the pool's
+            # leading dim) — allocator invariant; ki is clamped to NB - 1,
+            # so bt_r[b, ki] stays in-table
+            ki = jnp.minimum(jnp.minimum(kc * bps + j,
+                                         (pos_r[b] + L - 1) // block),
+                             NB - 1)
+            return (bt_r[b, ki], 0, h, 0)
+        return pl.BlockSpec((1, block, 1, dh), imap)
+
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               block=block, group=group, L=L,
+                               bps=bps, nb=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                        # pos, block_tables
+        grid=(B, KV, nkc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L * group, dh),
+                         lambda b, h, kc, pos_r, bt_r: (b, h, 0, 0)),   # q
+            *[kv_spec(j) for j in range(bps)],                          # k
+            *[kv_spec(j) for j in range(bps)],                          # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, L * group, dh),
+                               lambda b, h, kc, pos_r, bt_r: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((L * group, 1), jnp.float32),
+            pltpu.VMEM((L * group, 1), jnp.float32),
+            pltpu.VMEM((L * group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, L * group, dh), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), qg,
+      *([k_pool] * bps), *([v_pool] * bps))
+    return jnp.transpose(out.reshape(B, KV, L, group, dh),
+                         (0, 2, 1, 3, 4)).reshape(B, L, H, dh)
+
+
 def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
                            pos: Array, block_tables: Array, *,
                            window: int = 0, blocks_per_step: int = 1,

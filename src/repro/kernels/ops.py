@@ -73,6 +73,15 @@ def paged_decode_attention(q, k_pool, v_pool, pos, block_tables, *,
 
 
 @functools.partial(jax.jit, static_argnames=("blocks_per_step",))
+def paged_verify_attention(q, k_pool, v_pool, pos, block_tables, *,
+                           blocks_per_step: int = 1):
+    return _decode.paged_verify_attention(q, k_pool, v_pool, pos,
+                                          block_tables,
+                                          blocks_per_step=blocks_per_step,
+                                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("blocks_per_step",))
 def chunk_prefill_attention(q, k_pool, v_pool, start, block_table, *,
                             blocks_per_step: int = 1):
     return _decode.chunk_prefill_attention(q, k_pool, v_pool, start,

@@ -106,6 +106,17 @@ def main() -> None:
                     help="run the legacy host epilogue instead of the fused "
                          "single-dispatch decode step (parity escape hatch; "
                          "slot engine)")
+    ap.add_argument("--speculative", choices=["ngram", "expert"],
+                    default=None,
+                    help="speculative decoding: draft spec_len-1 tokens "
+                         "(host n-gram prompt lookup, or the mixture's "
+                         "expert 0 on device) and verify the span in one "
+                         "dispatch — outputs stay token-for-token "
+                         "identical to vanilla decode (needs --paged; "
+                         "'expert' needs --strategy mixture)")
+    ap.add_argument("--spec-len", type=int, default=4,
+                    help="speculative span length L: one committed token "
+                         "+ L-1 drafts verified per step (1 = vanilla)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -145,7 +156,8 @@ def main() -> None:
             chunked_prefill=args.chunked_prefill, chunk=args.prefill_chunk,
             token_budget=args.token_budget, prefix_cache=args.prefix_cache,
             fused_step=not args.no_fused_step, sanitize=args.sanitize,
-            use_kernel=args.use_kernel, strategy=args.strategy)
+            use_kernel=args.use_kernel, strategy=args.strategy,
+            speculative=args.speculative, spec_len=args.spec_len)
         ecfg.validate(model)
         server = make_engine(model, experts=experts, router=router,
                              config=ecfg)

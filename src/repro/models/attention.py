@@ -220,6 +220,63 @@ def paged_decode_attention(params, x: Array, cfg,
     return proj, (k_pool, v_pool)
 
 
+def paged_verify_attention(params, x: Array, cfg,
+                           pool: Tuple[Array, Array], pos: Array,
+                           block_tables: Array, *,
+                           use_kernel: bool = False, rope: bool = True):
+    """Speculative multi-token verify against a PAGED KV cache.
+
+    x: (B, L, D) — row ℓ of slot b is the candidate token sitting at
+    absolute position ``pos[b] + ℓ`` (row 0 is the slot's committed next
+    token, rows 1..L-1 are draft tokens); pool K/V: (P, block, KV, dh);
+    pos: (B,) each slot's current write position; block_tables: (B, NB).
+    Returns (out (B, L, D), new pool).
+
+    All L candidate K/V are scattered into the pool FIRST, then every row
+    attends under the span-causal rule ``key position ≤ pos + ℓ`` — the
+    same single masking rule as chunked prefill, so a candidate sees the
+    committed prefix plus the earlier candidates of its own span.
+    Rejected-tail writes are rolled back by OVERWRITE: they sit at
+    positions strictly greater than the post-accept position, the mask
+    hides them from every later query, and the next span (or vanilla
+    step) re-scatters those offsets before anything attends there.
+    Positions past the table horizon scatter into the reserved scratch
+    block 0 (inactive slots — pos 0, zeroed tables — land there too).
+    Sliding-window (ring) addressing is not supported — the scheduler
+    only routes speculation-capable (windowless) models here.
+    """
+    B, L, D = x.shape
+    k_pool, v_pool = pool
+    bs = k_pool.shape[1]
+    NB = block_tables.shape[1]
+    S_log = NB * bs
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    positions = pos_b[:, None] + jnp.arange(L)[None, :]          # (B, L)
+    q, k_new, v_new = _qkv(params, x, cfg, positions, rope=rope)
+    flat_pos = positions.reshape(-1)                             # (B·L,)
+    rows = jnp.repeat(jnp.arange(B), L)
+    safe = flat_pos < S_log
+    blk = jnp.where(
+        safe, block_tables[rows, jnp.clip(flat_pos // bs, 0, NB - 1)], 0)
+    off = jnp.where(safe, flat_pos % bs, 0)
+    k_pool = k_pool.at[blk, off].set(
+        k_new.reshape(B * L, *k_new.shape[2:]).astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(
+        v_new.reshape(B * L, *v_new.shape[2:]).astype(v_pool.dtype))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.paged_verify_attention(q, k_pool, v_pool, pos_b,
+                                          block_tables)
+    else:
+        kf = k_pool[block_tables].reshape(B, S_log, *k_pool.shape[2:])
+        vf = v_pool[block_tables].reshape(B, S_log, *v_pool.shape[2:])
+        idx = jnp.arange(S_log)[None, None, :]
+        valid = idx <= positions[:, :, None]                # (B, L, S_log)
+        out = gqa_sdpa(q, kf, vf, valid, jnp.dtype(cfg.attn_softmax_dtype))
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return proj, (k_pool, v_pool)
+
+
 def chunk_attention(params, x: Array, cfg, pool: Tuple[Array, Array],
                     start: Array, length: Array, block_table: Array, *,
                     use_kernel: bool = False):

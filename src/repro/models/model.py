@@ -483,6 +483,22 @@ class Model:
         silently corrupt it — so they take the direct (uncached) path."""
         return self.cfg.family not in ("ssm", "hybrid")
 
+    @property
+    def speculative_capable(self) -> bool:
+        """True when a multi-token verify span can be ROLLED BACK by
+        position: rejecting a draft must leave the decode state exactly
+        as if the rejected positions were never fed. Paged attention KV
+        qualifies — rejected-tail writes sit at positions the causal mask
+        hides, and the next span overwrites them before anything attends
+        there. Recurrent families (ssm, hybrid) fold every fed token into
+        a running state that cannot be positionally unwound, and
+        sliding-window (ring) caches overwrite live slots when the span
+        wraps — both degrade to the vanilla one-token step instead (the
+        scheduler consults this flag; speculation is a pure optimization,
+        so degrading costs correctness nothing)."""
+        return self.cfg.family not in ("ssm", "hybrid") \
+            and self.cfg.sliding_window <= 0
+
     def cache_spec(self, block_size: int = 0) -> CacheSpec:
         """Batch-axis descriptor matching ``_cache_struct``'s layouts.
 
@@ -1077,6 +1093,93 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
         return logits[:, 0], new_cache
+
+    def verify_step_paged(self, params, cache, tokens: Array, pos: Array,
+                          block_tables: Array, *, use_kernel: bool = False):
+        """Speculative span verify against the paged cache: score L
+        candidate positions per slot in ONE forward. tokens: (B, L) int32
+        — column 0 is each slot's committed next token, columns 1..L-1
+        its draft tokens; pos: (B,) int32 the position column 0 writes
+        at; block_tables: (B, NB). Returns (logits (B, L, V), new cache):
+        logits row j is the next-token distribution AFTER feeding tokens
+        0..j, i.e. what a vanilla ``decode_step_paged`` at position
+        ``pos + j`` would have produced had drafts 0..j-1 been committed.
+
+        Only speculation-capable families run here (see
+        ``speculative_capable``) — the span's K/V writes are rolled back
+        by overwrite, which recurrent state cannot do."""
+        cfg = self.cfg
+        if not self.speculative_capable:
+            raise ValueError(
+                f"family '{cfg.family}' (window={cfg.sliding_window}) "
+                "cannot verify speculative spans — check "
+                "speculative_capable before dispatching")
+        x = embed(params["embed"], tokens, cfg.cdtype)           # (B,L,D)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(x, layer_and_cache):
+                layer, (k, v) = layer_and_cache
+                a, kv = attn.paged_verify_attention(
+                    layer["attn"], rms_norm(x, layer["ln1"], cfg.norm_eps),
+                    cfg, (k, v), pos, block_tables, use_kernel=use_kernel)
+                h = x + a
+                y = rms_norm(h, layer["ln2"], cfg.norm_eps)
+                out = h + (moe_lib.moe_ffn(layer["moe"], y, cfg)
+                           if cfg.family == "moe" else swiglu(layer["ffn"], y))
+                return out, kv
+            x, (ks, vs) = scan_layers(
+                body, x, (params["blocks"], (cache["k"], cache["v"])), cfg)
+            new_cache = {"k": ks, "v": vs}
+
+        elif cfg.family == "audio":
+            def body(x, layer_and_cache):
+                layer, (k, v, xk, xv) = layer_and_cache
+                a, kv = attn.paged_verify_attention(
+                    layer["self_attn"], rms_norm(x, layer["ln1"],
+                                                 cfg.norm_eps),
+                    cfg, (k, v), pos, block_tables, use_kernel=use_kernel)
+                h = x + a
+                h = h + attn.cross_attention(
+                    layer["cross_attn"], rms_norm(h, layer["ln2"],
+                                                  cfg.norm_eps),
+                    (xk, xv), cfg)
+                out = h + swiglu(layer["ffn"],
+                                 rms_norm(h, layer["ln3"], cfg.norm_eps))
+                return out, kv + (xk, xv)
+            x, (ks, vs, xks, xvs) = scan_layers(
+                body, x, (params["blocks"],
+                          (cache["k"], cache["v"], cache["xk"],
+                           cache["xv"])), cfg)
+            new_cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+        else:
+            raise ValueError(cfg.family)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.tie_embeddings, cfg.vocab)
+        return logits, new_cache
+
+    def fused_verify_step(self, params, cache, state, drafts: Array, *,
+                          cache_len: int, use_kernel: bool = False):
+        """One WHOLE speculative step as a single traceable computation:
+        the span verify forward over ``[committed token, drafts]``
+        followed by the accept/reject epilogue (deterministic token-match
+        against the seeded stream, per-offset stop/budget/context checks,
+        variable-length position advance) from ``repro.serve.fused``.
+
+        drafts: (B, L-1) int32 draft tokens per slot. Returns
+        ``(new_cache, new_state, toks, n_emit, done)`` — the host reads
+        back the ``(toks, n_emit, done)`` triple in one ``device_get``.
+        """
+        # function-level import: repro.serve pulls in the schedulers, which
+        # import this module — the epilogue itself is a leaf
+        from repro.serve.fused import verify_epilogue
+        tokens = jnp.concatenate([state["tok"][:, None], drafts], axis=1)
+        scores, cache = self.verify_step_paged(
+            params, cache, tokens, state["pos"], state["tables"],
+            use_kernel=use_kernel)
+        state, toks, n_emit, done = verify_epilogue(
+            scores, drafts, state, cache_len=cache_len)
+        return cache, state, toks, n_emit, done
 
     def fused_decode_step(self, params, cache, state, *, cache_len: int,
                           use_kernel: bool = False, paged: bool = False):

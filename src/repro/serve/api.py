@@ -144,6 +144,15 @@ class EngineConfig:
     # -- PoolSanitizer (PR 7): debug-mode per-step ownership scan over the
     #    paged pool (repro.analysis.sanitizer); violations raise
     sanitize: bool = False
+    # -- speculative decoding (PR 8): draft spec_len - 1 candidate tokens
+    #    ("ngram": prompt-lookup from the request's own history; "expert":
+    #    the stacked mixture's expert 0 drafts on-device) and verify the
+    #    whole span in one dispatch — token-for-token identical outputs,
+    #    fewer dispatches per token. Families whose decode state cannot be
+    #    positionally rolled back (ssm/hybrid, sliding windows) degrade to
+    #    vanilla decode; spec_len == 1 IS vanilla decode.
+    speculative: Optional[str] = None   # None | "ngram" | "expert"
+    spec_len: int = 4
     # -- misc
     use_kernel: bool = False
     strategy: str = "top1"        # decentralized engines: "top1" | "mixture"
@@ -194,6 +203,30 @@ class EngineConfig:
             raise ValueError(
                 f"strategy must be 'top1' or 'mixture', got "
                 f"{self.strategy!r}")
+        if self.speculative is not None:
+            if self.speculative not in ("ngram", "expert"):
+                raise ValueError(
+                    f"speculative must be 'ngram' or 'expert', got "
+                    f"{self.speculative!r}")
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding verifies a multi-token span "
+                    "through the paged block pool — enable paging "
+                    "(page_block > 0)")
+            if not self.fused_step:
+                raise ValueError(
+                    "speculative decoding runs draft + verify + accept "
+                    "inside the fused dispatch — it needs fused_step=True")
+            if self.speculative == "expert" and self.strategy != "mixture":
+                raise ValueError(
+                    "speculative='expert' drafts with the stacked "
+                    "mixture's expert 0 — it needs strategy='mixture' "
+                    "(single-model and top-1 engines have no expert "
+                    "stack to draft from; use speculative='ngram')")
+        if self.spec_len < 1:
+            raise ValueError(
+                f"spec_len must be >= 1 (1 = vanilla decode, L > 1 "
+                f"verifies L - 1 drafts per step), got {self.spec_len}")
         if model is not None:
             self._validate_model(model)
 

@@ -24,6 +24,33 @@ Semantics are kept EXACTLY equal to the unfused host epilogue
 * the capacity bound is position-exact: position ``cache_len - 1`` is
   decodable, the write that would land at ``cache_len`` is not.
 
+``verify_epilogue`` is the speculative sibling: given the scores of L
+candidate positions and the L-1 draft tokens that produced them, it
+computes the deterministic seeded-sampling accept rule (the token the
+vanilla trajectory WOULD emit at each offset — count ``c0 + j`` of the
+request's seeded stream — accepted while the draft matches it), the
+per-offset stop/budget/context checks with the same precedence, and the
+variable-length position advance, still as pure device ops.
+
+**The single-dispatch contract** (shared with ``serve/scheduler.py``):
+
+* on device, per step: the model forward (decode, verify or co-scheduled
+  chunk), Eq. 27 mixture mixing, seeded sampling / the speculative accept
+  rule, stop/eos/budget/context checks, and the position advance — one
+  jitted dispatch, no intermediate host sync;
+* the host may read back ONE ``jax.device_get`` per step — the
+  ``(next_token, done)`` pair (vanilla) or ``(tokens, n_emit, done)``
+  triple (speculative) — plus nothing else on the hot path;
+* host-side state mutation (slot tables, block allocator, request
+  streams) is driven entirely by that readback; the persistent device
+  state dict is rebuilt only on admission/retirement/growth events.
+
+repro-lint enforces the contract: the step loop and this module are
+``# repro: hot-path`` scope (eager device ops and implicit syncs are
+flagged), the dispatch entry points are ``# repro: jit`` scope (retrace
+hazards are flagged), and the kernels' index maps carry
+``# repro: bounds`` justifications.
+
 This module is a leaf: it imports only jax and the shared ``PROB_FLOOR``
 so every consumer (schedulers, the model's fused entry point, the stacked
 mixture core) can pull it in without import cycles.
@@ -36,7 +63,8 @@ import jax.numpy as jnp
 from repro.core.ensemble import PROB_FLOOR
 
 __all__ = ["DONE_REASONS", "argmax_tokens", "decode_epilogue", "pick_first",
-           "sample_tokens", "sample_tokens_probs", "_sample_tokens"]
+           "sample_tokens", "sample_tokens_probs", "verify_epilogue",
+           "_sample_tokens"]
 
 #: ``done`` bitmap code → finish reason (0 means "keep decoding").
 DONE_REASONS = {1: "stop", 2: "length", 3: "truncated"}
@@ -139,3 +167,89 @@ def decode_epilogue(scores, state, *, cache_len: int,
                      counts=counts,
                      active=active & ~fin)
     return new_state, nxt, done
+
+
+def verify_epilogue(scores, drafts, state, *, cache_len: int,
+                    from_probs: bool = False):
+    """The speculative span's accept/reject + bookkeeping as device ops.
+
+    scores: (n_slots, L, V) — row j is the model's next-token scores at
+    position ``pos + j``, i.e. after feeding the slot's committed token
+    (offset 0) and draft tokens ``drafts[:, :j]`` (offsets 1..j);
+    drafts: (n_slots, L-1) int32 candidate tokens; state: the same
+    device-state dict as ``decode_epilogue``.
+
+    The accept rule is DETERMINISTIC token-match: seeded sampling makes
+    the vanilla trajectory a pure function of (seed, count, scores), so
+    the "true" token at offset j is ``_sample_tokens(scores[:, j], ...,
+    counts + j)`` — exactly what a vanilla step with the same prefix
+    would emit — and a draft is accepted iff it EQUALS it. This is
+    standard rejection sampling degenerated to its deterministic special
+    case (the proposal is accepted with probability 1 when it matches
+    the target draw, 0 otherwise), which is what makes the token-for-
+    token parity invariant hold for sampled requests, not just greedy.
+    Offset j's scores are only consulted when drafts 1..j all matched,
+    so every emitted token saw exactly the vanilla prefix.
+
+    Per-offset finish checks replay ``decode_epilogue`` at each emitted
+    offset (count ``c0+j+1`` vs budget, position ``p0+j+1`` vs context,
+    stop-id membership; precedence stop > length > truncated): the span
+    is truncated at the FIRST halting offset, so a stop token accepted
+    mid-span retires the request once and the rest of the draft is
+    discarded on device — the host never sees the dead tail.
+
+    Returns ``(new_state, toks, n_emit, done)``: ``toks`` (n_slots, L)
+    holds the emitted tokens left-aligned (rows of inactive slots are
+    zeroed), ``n_emit`` (n_slots,) how many of them are real — at least
+    1 for an active slot (offset 0 never needs a draft: all-reject spans
+    still make forward progress), at most L — and ``done`` the
+    ``DONE_REASONS`` bitmap. One ``device_get`` of the triple is the
+    step's entire host readback.
+    """
+    B, L, V = scores.shape
+    if from_probs:
+        scores = jnp.log(jnp.maximum(scores, PROB_FLOOR))
+    active = state["active"]
+    offs = jnp.arange(L, dtype=jnp.int32)
+    # the vanilla trajectory's token at each offset: count c0 + j of the
+    # request's seeded stream (greedy rows take the argmax, same as ever)
+    true = jnp.stack(
+        [_sample_tokens(scores[:, j], state["temps"], state["top_ks"],
+                        state["seeds"], state["counts"] + j)
+         for j in range(L)], axis=1)                          # (B, L)
+    if L > 1:
+        match = (drafts == true[:, :L - 1]).astype(jnp.int32)
+        n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)   # (B,)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+    m_max = n_acc + 1            # accepted drafts + the free bonus token
+    cnt_after = state["counts"][:, None] + 1 + offs[None, :]  # (B, L)
+    pos_after = state["pos"][:, None] + 1 + offs[None, :]
+    is_stop = jnp.any(true[:, :, None] == state["stop_ids"][:, None, :],
+                      axis=-1)
+    is_len = cnt_after >= state["max_new"][:, None]
+    is_trunc = pos_after >= cache_len
+    halt = is_stop | is_len | is_trunc                        # (B, L)
+    first_halt = jnp.where(jnp.any(halt, axis=1),
+                           jnp.argmax(halt, axis=1), L).astype(jnp.int32)
+    m = jnp.minimum(m_max, first_halt + 1)
+    m = jnp.where(active, m, 0).astype(jnp.int32)
+    halted = active & (first_halt < m_max)
+    code = jnp.where(is_stop, 1, jnp.where(is_len, 2, 3))
+    h = jnp.clip(first_halt, 0, L - 1)
+    done = jnp.where(halted,
+                     jnp.take_along_axis(code, h[:, None], axis=1)[:, 0],
+                     0).astype(jnp.int32)
+    fin = done > 0
+    counts = state["counts"] + m
+    pos = state["pos"] + m
+    last = jnp.take_along_axis(
+        true, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+    nxt = jnp.where(active, last, state["tok"]).astype(jnp.int32)
+    new_state = dict(state,
+                     tok=jnp.where(fin, 0, nxt).astype(jnp.int32),
+                     pos=jnp.where(fin, 0, pos).astype(jnp.int32),
+                     counts=counts,
+                     active=active & ~fin)
+    toks = jnp.where(active[:, None], true, 0).astype(jnp.int32)
+    return new_state, toks, m, done

@@ -87,6 +87,33 @@ request's frozen-encoder features and either
   probability mixture, so the top-k path is a single sharded op instead of
   K sequential engine calls. In the paged layout all K experts share one
   block table per slot (the pool carries the ``dexpert`` dim).
+
+**The single-dispatch contract.** Every steady-state scheduler step is
+ONE jitted device dispatch followed by ONE ``jax.device_get``: the model
+forward (plus any co-scheduled prefill chunk), Eq. 27 mixing where
+applicable, seeded sampling, the stop/budget/context checks and the
+position advance all run on device (``repro.serve.fused``), and the host
+reads back only the ``(next_tok, done)`` pair — or, speculating, the
+``(toks, n_emit, done)`` triple. Host code between dispatches does pure
+numpy bookkeeping; anything that would force an extra device sync in the
+step loop belongs inside the fused step (repro-lint's host-sync rule
+enforces this mechanically).
+
+Speculative decoding (``EngineConfig(speculative="ngram" | "expert",
+spec_len=L)``) turns the per-step dispatch into a draft + multi-token
+verify: a cheap proposer guesses ``L - 1`` tokens (host n-gram prompt
+lookup — ``repro.serve.speculate`` — or the mixture core's expert 0
+drafting on device), ``Model.verify_step_paged`` scores all ``L``
+candidate positions in one launch over the paged pool, and the fused
+accept rule (``verify_epilogue``) keeps the longest prefix that matches
+the request's OWN seeded sampling stream — so outputs are token-for-token
+identical to vanilla decode, speculating or not, greedy or sampled.
+Rejected candidates need no undo: their K/V writes sit past the accepted
+position and the next span overwrites them before any query can attend
+that far (rollback-by-overwrite). Steps that cannot speculate — chunk
+co-scheduling, pool pressure on the span reservation, non-capable model
+families (``Model.speculative_capable``) — fall back to the vanilla
+one-token step; the trajectory is unchanged, only the step size.
 """
 from __future__ import annotations
 
@@ -102,7 +129,7 @@ import numpy as np
 from repro.analysis.sanitizer import PoolSanitizer
 from repro.core.ensemble import (PROB_FLOOR, make_stacked_chunk_fns,
                                  make_stacked_fused, make_stacked_serving,
-                                 mix_expert_logits)
+                                 make_stacked_verify, mix_expert_logits)
 from repro.models.model import Model
 from repro.serve.api import (EngineConfig, RequestOutput, SamplingParams,
                              TokenDelta, effective_page_block, stop_id_row)
@@ -110,6 +137,7 @@ from repro.serve.fused import (DONE_REASONS, _sample_tokens, argmax_tokens,
                                decode_epilogue, pick_first, sample_tokens,
                                sample_tokens_probs)
 from repro.serve.prefix_cache import PrefixCache, block_keys
+from repro.serve.speculate import NGramProposer
 
 Array = jnp.ndarray
 
@@ -354,6 +382,15 @@ class _SlotTable:
         #                          # changed: patch st["tables"] only
         self._stop_width = 1       # stop-id matrix width (monotone, pow2 —
         #                          # each growth retraces the fused step once)
+        self.speculative: Optional[str] = None  # set from EngineConfig by
+        self.spec_len = 1          # _init_speculation (servers call it)
+        self._can_spec = False     # armed: config asks AND the model can
+        #                          # roll a span back (speculative_capable)
+        self._step_span = 1        # decode-write span of the CURRENT step:
+        #                          # 1 vanilla, spec_len speculating (the
+        #                          # PoolSanitizer and _nb_live read it)
+        self.n_spec_steps = 0      # lifetime speculative dispatches
+        self.n_spec_tokens = 0     # tokens they emitted (>= n_spec_steps)
         self.block_size = block_size
         self.paged = block_size > 0
         if self.paged:
@@ -685,6 +722,44 @@ class _SlotTable:
                     f"{self.allocator.n_blocks} blocks — provision more "
                     f"pool_blocks or fewer slots")
 
+    def _grow_active_span(self, span: int) -> bool:
+        """Span variant of ``_grow_active``: make sure every decoding slot
+        owns blocks for ALL ``span`` positions a speculative step may
+        write. False → the pool can't cover the whole span right now; the
+        caller degrades to the vanilla one-token step instead of raising
+        (speculation is a latency lever, never a liveness requirement).
+        Slots reserved before the failing one keep their blocks — they
+        would need them within ``span`` vanilla steps anyway, and
+        retirement returns them. Only reached non-ring (sliding-window
+        models are not ``speculative_capable``)."""
+        need = np.minimum(-(-(self.pos + span) // self.block_size),
+                          self.nb_slot)
+        if not np.any((need > self.n_alloc) & (self.n_alloc > 0)):
+            return True
+        for slot in self.decoding:
+            if not self._reserve(slot, int(self.pos[slot]) + span):
+                return False
+        return True
+
+    def _init_speculation(self, config: EngineConfig, model,
+                          build) -> None:
+        """Arm speculative decoding when the config asks for it AND the
+        engine shape supports it: fused paged decode on a model that can
+        roll a span back (``speculative_capable`` — recurrent and
+        sliding-window families can't, and silently degrade to vanilla
+        decode, where parity is trivial). ``build()`` returns the jitted
+        verify step, deferred so ineligible servers never trace it."""
+        self.speculative = config.speculative
+        self.spec_len = config.spec_len
+        self._can_spec = (config.speculative is not None
+                          and config.spec_len > 1 and self.fused
+                          and self.paged and model.speculative_capable)
+        if not self._can_spec:
+            return
+        self._vstep = build()
+        self._ngram = NGramProposer(self.spec_len) \
+            if config.speculative == "ngram" else None
+
     def _release(self, slot: int) -> None:
         self.slot_req[slot] = None
         self.pos[slot] = 0           # free slots write the scratch block
@@ -893,6 +968,7 @@ class _SlotTable:
         (next_tok, done) pair — and the chunk's first token on a prefill's
         final chunk."""
         dec = self.decoding
+        self._step_span = 1          # chunk/vanilla steps write one position
         do_chunk = self.chunked and self._schedule_chunk()
         if not dec and not do_chunk:
             return []
@@ -913,11 +989,88 @@ class _SlotTable:
             retired += self._after_chunk_tok(slot, length,
                                              lambda: int(first_h[0]))
             return retired
+        if self._can_spec:
+            retired = self._decode_step_spec(dec)
+            if retired is not None:
+                return retired
+            # pool can't cover the span this step: vanilla single token
         self._grow_active()
         st = self._device_state()
         nxt, done = self._run_fused(st)
         nxt_h, done_h = jax.device_get((nxt, done))
         return self._advance_fused(dec, nxt_h, done_h)
+
+    # ------------------------------------------------------------------
+    # Speculative decoding: draft + multi-token verify (repro.serve.
+    # speculate / Model.verify_step_paged / fused.verify_epilogue)
+    # ------------------------------------------------------------------
+
+    def _decode_step_spec(self, dec: List[int]) -> Optional[List[Request]]:
+        """One speculative step, still a single dispatch + single
+        ``device_get``: reserve every decoding slot's span blocks, build
+        the drafts (host n-gram lookup, or None for on-device expert
+        drafting), run the fused verify and advance each slot by its
+        accepted run. None → the pool can't cover the span; the caller
+        falls back to the vanilla one-token step (the output trajectory
+        is identical either way — only the step size changes)."""
+        span = self.spec_len
+        if not self._grow_active_span(span):
+            return None
+        self._step_span = span       # sanitizer plan + _nb_live horizon
+        st = self._device_state()
+        drafts = self._draft_tokens(dec) if self._ngram is not None else None
+        toks, n_emit, done = self._run_verify(st, drafts)
+        toks_h, n_h, done_h = jax.device_get((toks, n_emit, done))
+        return self._advance_span(dec, toks_h, n_h, done_h)
+
+    def _draft_tokens(self, dec: List[int]) -> Array:
+        """Host-side n-gram drafts, one row per slot. Idle / mid-prefill
+        rows stay zero: their verify writes land in the scratch block
+        (tables masked / zeroed) and the epilogue masks their outputs."""
+        drafts = np.zeros((self.n_slots, self.spec_len - 1), np.int32)
+        for s in dec:
+            r = self.slot_req[s]
+            drafts[s] = self._ngram.propose(
+                np.concatenate([r.tokens, np.asarray(r.out, np.int32)]))
+        return jnp.asarray(drafts)
+
+    def _run_verify(self, st, drafts):
+        """Dispatch one fused verify step; returns device
+        ``(toks, n_emit, done)`` and stores the new cache/state on self.
+        ``drafts`` is None when the verify fn drafts on device."""
+        raise NotImplementedError
+
+    def _advance_span(self, dec: List[int], toks: np.ndarray,
+                      n_emit: np.ndarray, done: np.ndarray
+                      ) -> List[Request]:
+        """Host half of the speculative step: record each decoding slot's
+        ACCEPTED run (1..spec_len tokens — forward progress is >= the
+        vanilla step by construction) and retire the slots the device
+        ``done`` bitmap flagged. The device already truncated each span
+        at its first stop/budget/context halt, so a request finishing
+        mid-span records nothing past its terminal token and retires
+        exactly once — ``stats()['stopped']`` counts it once too."""
+        retired = []
+        t = time.perf_counter()
+        for slot in dec:
+            req = self.slot_req[slot]
+            n = int(n_emit[slot])
+            for j in range(n):
+                req.record(int(toks[slot, j]), t)
+            self.pos[slot] += n
+            if n:
+                self.last_tok[slot] = toks[slot, n - 1]
+            self.n_spec_steps += 1
+            self.n_spec_tokens += n
+            d = int(done[slot])
+            if d:
+                reason = DONE_REASONS[d]
+                # the device bitmap replaces reason_now(): they must agree
+                assert reason == (req.reason_now() or "truncated"), \
+                    (slot, reason, req.reason_now())
+                self._retire_from_slot(slot, req, reason)
+                retired.append(req)
+        return retired
 
     # ------------------------------------------------------------------
     # Token selection: greedy fast path / per-request seeded sampling
@@ -985,6 +1138,12 @@ class _SlotTable:
         if self.paged:
             out["pool_free_blocks"] = self.allocator.n_free
             out["pool_blocks"] = self.allocator.n_blocks
+        if self.speculative is not None:
+            out["spec_steps"] = self.n_spec_steps
+            out["spec_tokens"] = self.n_spec_tokens
+            out["spec_tokens_per_step"] = (
+                self.n_spec_tokens / self.n_spec_steps
+                if self.n_spec_steps else 0.0)
         if self.prefix is not None:
             out.update(self.prefix.stats())
         if self.sanitizer is not None:
@@ -1082,7 +1241,9 @@ class _SlotTable:
         the first request that decodes to full depth."""
         if self.ring:
             return self.nb_slot
-        mx = int(self.pos.max(initial=0))
+        # a speculative step writes (and attends) up to _step_span - 1
+        # positions past pos, so the horizon covers the whole span
+        mx = int(self.pos.max(initial=0)) + self._step_span - 1
         return min(mx // self.block_size + 1, self.nb_slot)
 
     def _schedule_chunk(self) -> bool:
@@ -1326,6 +1487,19 @@ def make_fused_fns(model: Model, cache_len: int, chunk: int = 0, *,
     return step, jax.jit(step_chunk), jax.jit(chunk_only)
 
 
+def make_verify_fns(model: Model, cache_len: int, *,
+                    use_kernel: bool = False):
+    """The jitted speculative verify step one SlotServer runs on (shared
+    across the pods of a top-1 DecentralizedSlotServer, like
+    ``make_fused_fns``): ``verify(params, cache, state, drafts)`` →
+    ``(cache, state, toks, n_emit, done)`` — the span forward over
+    ``[committed token, drafts]`` plus the accept/reject epilogue in one
+    dispatch (``Model.fused_verify_step``). Traces once per drafts width,
+    which is fixed at ``spec_len - 1`` for an engine's lifetime."""
+    return jax.jit(lambda p, c, st, drafts: model.fused_verify_step(
+        p, c, st, drafts, cache_len=cache_len, use_kernel=use_kernel))
+
+
 class SlotServer(_SlotTable):
     """Continuous batching over ONE expert / model (greedy decoding).
 
@@ -1352,7 +1526,8 @@ class SlotServer(_SlotTable):
                  serve_fns=None, page_block: int = 0, pool_blocks: int = 0,
                  chunk: int = 0, token_budget: int = 0, chunk_fns=None,
                  prefix_cache: bool = False, fused_step: bool = True,
-                 fused_fns=None, config: Optional[EngineConfig] = None):
+                 fused_fns=None, verify_fns=None,
+                 config: Optional[EngineConfig] = None):
         if config is None:
             config = _legacy_config(
                 n_slots, cache_len, page_block=page_block,
@@ -1395,6 +1570,10 @@ class SlotServer(_SlotTable):
                 fused_fns or make_fused_fns(model, cache_len, chunk,
                                             use_kernel=use_kernel,
                                             paged=self.paged)
+        self._init_speculation(
+            config, model,
+            lambda: verify_fns or make_verify_fns(model, cache_len,
+                                                  use_kernel=use_kernel))
 
     def admit(self, req: Request) -> bool:
         """Admit a request into a free slot. Monolithic: prefill it alone
@@ -1427,6 +1606,11 @@ class SlotServer(_SlotTable):
         self.cache, self._dstate, nxt, done = self._fstep(
             self.params, self.cache, st)
         return nxt, done
+
+    def _run_verify(self, st, drafts):
+        self.cache, self._dstate, toks, n_emit, done = self._vstep(
+            self.params, self.cache, st, drafts)
+        return toks, n_emit, done
 
     def _run_fused_chunk(self, st, slot, xc, start, length, cbt, pick):
         (self.cache, self._dstate, nxt, done, first,
@@ -1565,6 +1749,12 @@ class MixtureSlotServer(_SlotTable):
                 make_stacked_fused(model, param_axes, cache_len,
                                    chunk_all=chunk_all,
                                    use_kernel=use_kernel, paged=self.paged)
+        self._init_speculation(
+            config, model,
+            lambda: make_stacked_verify(
+                model, param_axes, cache_len, config.spec_len,
+                use_kernel=use_kernel,
+                expert_draft=config.speculative == "expert"))
         # expert (K) dim at axis 1, AFTER each leaf's scan dim — the layout
         # the vmapped scanned decode consumes without per-step transposes
         shapes = model.paged_cache_shapes(
@@ -1623,6 +1813,14 @@ class MixtureSlotServer(_SlotTable):
         self.cache, self._dstate, nxt, done = self._fstep(
             self.stacked, self.cache, st)
         return nxt, done
+
+    def _run_verify(self, st, drafts):
+        # drafts is None when expert 0 drafts on device (speculative=
+        # "expert"); the n-gram variant takes the host drafts argument
+        out = self._vstep(self.stacked, self.cache, st) if drafts is None \
+            else self._vstep(self.stacked, self.cache, st, drafts)
+        self.cache, self._dstate, toks, n_emit, done = out
+        return toks, n_emit, done
 
     def _run_fused_chunk(self, st, slot, xc, start, length, cbt, pick):
         w_row = jnp.asarray(self.weights[slot:slot + 1])
@@ -1738,9 +1936,14 @@ class DecentralizedSlotServer:
                                   use_kernel=config.use_kernel,
                                   paged=eff_block > 0) \
                 if config.fused_step else None
+            vfns = make_verify_fns(model, cache_len,
+                                   use_kernel=config.use_kernel) \
+                if (config.speculative is not None and config.spec_len > 1
+                    and config.fused_step and eff_block > 0
+                    and model.speculative_capable) else None
             self.pods = [SlotServer(model, p, config=config,
                                     serve_fns=fns, chunk_fns=cfns,
-                                    fused_fns=ffns)
+                                    fused_fns=ffns, verify_fns=vfns)
                          for p in expert_params]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,

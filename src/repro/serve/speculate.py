@@ -1,0 +1,85 @@
+"""Draft-free speculative proposers: where candidate tokens come from.
+
+Speculative decoding splits a decode step into a cheap DRAFT of the next
+``spec_len - 1`` tokens and one multi-token VERIFY dispatch that scores
+every candidate position at once (``Model.verify_step_paged``); the
+accept rule (``serve.fused.verify_epilogue``) keeps the longest prefix
+that matches the vanilla trajectory, so the output stream is token-for-
+token identical to unspeculated decode and drafting is purely a latency
+lever. This repo drafts WITHOUT a separate draft model:
+
+* ``NGramProposer`` (here) — prompt-lookup drafting on the host: match
+  the request's most recent n-gram against its own earlier history
+  (prompt + generated tokens) and propose the tokens that followed the
+  previous occurrence. Free, model-agnostic, and strong exactly where
+  speculation pays most — repetitive text (code, templates, retrieval
+  echoes), where a single match often yields a full accepted span.
+* expert-0 drafting (``core.ensemble.make_stacked_verify``) — the
+  mixture core's K-expert stack already contains K cheap approximations
+  of the Eq. 27 ensemble; expert 0 drafts greedily on its own slice of
+  the shared paged cache (which mixture decode keeps warm for free) and
+  the full mixture verifies. Lives on-device inside the fused dispatch;
+  this module only provides the host-side n-gram half.
+
+Both proposers are interchangeable behind ``EngineConfig(speculative=
+"ngram" | "expert", spec_len=L)``; the scheduler feeds n-gram drafts
+into the verify dispatch as a (n_slots, L-1) argument and falls back to
+the vanilla one-token step whenever a step cannot speculate (chunk
+co-scheduling, pool pressure, non-capable model families).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = ["NGramProposer"]
+
+
+class NGramProposer:
+    """Prompt-lookup drafting from a request's own token history.
+
+    To propose, find the most recent EARLIER occurrence of the history's
+    final ``n``-gram and replay the ``spec_len - 1`` tokens that followed
+    it. No occurrence (or a too-short history) pads by repeating the last
+    token — a deliberately bad draft that costs nothing when rejected
+    (the verify step always emits at least the vanilla token).
+    """
+
+    def __init__(self, spec_len: int, n: int = 2):
+        if spec_len < 2:
+            raise ValueError(
+                f"spec_len must be >= 2 to draft anything, got {spec_len}")
+        if n < 1:
+            raise ValueError(f"n-gram length must be >= 1, got {n}")
+        self.spec_len = spec_len
+        self.n = n
+
+    def propose(self, history: Sequence[int]) -> np.ndarray:
+        """history: the request's prompt + generated tokens, oldest first.
+        Returns (spec_len - 1,) int32 draft tokens."""
+        want = self.spec_len - 1
+        h = np.asarray(history, dtype=np.int32)
+        pad = np.full(want, h[-1] if h.size else 0, np.int32)
+        if h.size <= self.n:
+            return pad
+        tail = h[-self.n:]
+        # scan candidate start positions right-to-left: most recent
+        # earlier occurrence wins (locality beats frequency for the
+        # repetitive workloads speculation targets)
+        windows = np.lib.stride_tricks.sliding_window_view(h[:-1], self.n)
+        hits = np.nonzero((windows == tail).all(axis=1))[0]
+        if hits.size == 0:
+            return pad
+        start = int(hits[-1]) + self.n      # first token AFTER the match
+        cont = h[start:start + want]
+        if cont.size < want:
+            cont = np.concatenate(
+                [cont, np.full(want - cont.size,
+                               cont[-1] if cont.size else h[-1], np.int32)])
+        return cont.astype(np.int32)
+
+    def propose_batch(self, histories: List[Sequence[int]]) -> np.ndarray:
+        """Stacked drafts for a batch of histories: (len, spec_len - 1)."""
+        return np.stack([self.propose(h) for h in histories]) \
+            if histories else np.zeros((0, self.spec_len - 1), np.int32)
