@@ -27,9 +27,11 @@ from __future__ import annotations
 import json
 import sys
 
-# (section, key) -> spec. "floor" is an absolute hard bound; "rel_tol" is
-# the allowed relative drop (for higher-is-better) / rise (for lower) vs
-# the committed baseline. Both must hold.
+# (section, key) -> spec. "floor" is an absolute hard bound (higher-is-
+# better); "ceil" is its lower-is-better mirror — an absolute hard upper
+# bound that binds even when the baseline-relative band is looser.
+# "rel_tol" is the allowed relative drop (for higher-is-better) / rise
+# (for lower) vs the committed baseline. All present bounds must hold.
 GATED = {
     # re-calibrated when the bench's rep statistic was fixed to report one
     # self-consistent (looped, stacked, ratio) triple: the old number
@@ -62,6 +64,12 @@ GATED = {
     # floor (not the committed machine's ~3.2x) is the binding bound
     ("serve_prefix", "prefix_ttft_speedup"): {
         "higher_is_better": True, "rel_tol": 0.60, "floor": 1.30},
+    # the telemetry layer's contract (docs/observability.md): full span
+    # tracing + the always-on metrics registry cost ≤ 5% of serving
+    # throughput on the chunked+paged+prefix configuration. The ceiling
+    # is the claim itself — it binds regardless of baseline drift
+    ("serve_obs", "obs_overhead_ratio"): {
+        "higher_is_better": False, "rel_tol": 0.35, "ceil": 1.05},
 }
 
 INVARIANTS = [
@@ -81,6 +89,9 @@ INVARIANTS = [
     # speculation is a latency lever, never a sampling change: greedy AND
     # seeded-sampled outputs are token-for-token identical with it on
     ("serve_speculative", "spec_parity"),
+    # span tracing is observation-only: token-for-token identical outputs
+    # with the recorder on (the no-op-recorder side is the default path)
+    ("serve_obs", "obs_parity"),
 ]
 
 INFORMATIONAL = [
@@ -109,6 +120,15 @@ INFORMATIONAL = [
     ("serve_speculative", "spec_accept_rate"),
     ("serve_speculative", "spec_over_vanilla"),
     ("serve_speculative", "spec_tok_per_s"),
+    # per-workload speculative diagnostics from the telemetry registry
+    # (draft-source attribution + per-request accept-rate mean)
+    ("serve_speculative", "spec_drafts_accepted"),
+    ("serve_speculative", "spec_request_accept_rate_mean"),
+    # telemetry cost + trace volume (the ratio is gated above; the raw
+    # tok/s and event counts are machine-/ring-dependent)
+    ("serve_obs", "traced_tok_per_s"),
+    ("serve_obs", "trace_events"),
+    ("serve_obs", "ttft_mean_s"),
 ]
 
 
@@ -127,6 +147,8 @@ def check(result: dict, baseline: dict) -> int:
                 bound = max(bound, spec["floor"])
         else:
             bound = base * (1.0 + tol)
+            if "ceil" in spec:
+                bound = min(bound, spec["ceil"])
             ok = got <= bound
         verdict = "ok" if ok else f"REGRESSION (bound {bound:.3f})"
         print(f"{sec + '.' + key:52s} {got:10.3f} {base:10.3f}  {verdict}")

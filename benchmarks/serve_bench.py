@@ -64,8 +64,17 @@
    accepted tokens buy back; the win shows where dispatch latency
    dominates step compute).
 
+8. Telemetry overhead (``run_obs``): the same chunked+paged+prefix
+   queue served with ``EngineConfig(trace=True)`` (full span tracing
+   into the ring recorder; the metrics registry is always on) and with
+   tracing off. Asserts exact greedy parity — telemetry must observe,
+   never perturb — and reports the overhead ratio (the CI gate:
+   ≤ 1.05×). The traced rep's Perfetto trace and metrics snapshot are
+   written to ``obs_trace.json`` / ``obs_metrics.json`` so CI uploads a
+   loadable sample artifact every run.
+
 Run as a module (``python -m benchmarks.serve_bench``) to execute all
-seven and write ``BENCH_serve.json`` — the artifact
+eight and write ``BENCH_serve.json`` — the artifact
 ``benchmarks/check_regression.py`` gates CI on.
 """
 from __future__ import annotations
@@ -686,6 +695,17 @@ def run_speculative(_settings=None, *, n_requests: int = 12,
     steps, toks = st["spec_steps"], st["spec_tokens"]
     accept_rate = ((toks - steps) / (steps * (spec_len - 1))
                    if steps else 0.0)
+    # per-workload diagnostics from the telemetry registry (PR 9): the
+    # draft-source counters make the aggregate accept rate attributable
+    # (which drafter proposed how much, how much survived verify), and
+    # the per-request accept-rate histogram shows whether a low mean is
+    # uniform or a bimodal mix of repetitive (high-accept) and sampled
+    # (near-zero-accept) requests — srv_s is the LAST rep's fresh server,
+    # so these cover exactly one serve() pass over the queue.
+    obs = srv_s.obs
+    proposed = int(obs.drafts("ngram", "proposed").value)
+    accepted = int(obs.drafts("ngram", "accepted").value)
+    req_rate = obs.req_accept_rate
     result = {
         "requests": n_requests, "slots": n_slots, "spec_len": spec_len,
         "vanilla_tok_per_s": round(van_tps, 2),
@@ -695,6 +715,11 @@ def run_speculative(_settings=None, *, n_requests: int = 12,
         "spec_tokens": toks,
         "spec_tokens_per_step": round(st["spec_tokens_per_step"], 3),
         "spec_accept_rate": round(accept_rate, 3),
+        "spec_drafts_proposed": proposed,
+        "spec_drafts_accepted": accepted,
+        "spec_request_accept_rate_mean": (
+            round(float(req_rate.value), 3) if req_rate.count else 0.0),
+        "spec_requests_measured": req_rate.count,
         "spec_parity": True,
     }
     print("\n== Serving: n-gram speculative decoding vs vanilla ==")
@@ -704,6 +729,101 @@ def run_speculative(_settings=None, *, n_requests: int = 12,
     print(f"spec_over_vanilla,{result['spec_over_vanilla']}")
     print(f"spec_tokens_per_step,{result['spec_tokens_per_step']}")
     print(f"spec_accept_rate,{result['spec_accept_rate']}")
+    print(f"spec_drafts,{accepted}/{proposed} accepted (source=ngram)")
+    print("spec_request_accept_rate_mean,"
+          f"{result['spec_request_accept_rate_mean']}")
+    print("parity,exact")
+    return result
+
+
+def run_obs(_settings=None, *, n_requests: int = 24, n_slots: int = 4,
+            prompt: int = 12, max_new: int = 16, cache_len: int = 64,
+            page_block: int = 8, chunk: int = 8, reps: int = 3,
+            trace_out: str = "obs_trace.json",
+            metrics_out: str = "obs_metrics.json"):
+    """Telemetry overhead on the chunked+paged+prefix-cached queue.
+
+    The per-engine metrics registry is always on, so the "plain" side
+    here is exactly production default; the traced side adds
+    ``EngineConfig(trace=True)`` — every scheduler-boundary span lands
+    in the ring recorder. Asserts token-for-token greedy parity (the
+    whole telemetry layer is host-side observation; it must never
+    perturb the schedule) and gates the overhead ratio at ≤ 1.05× in
+    check_regression.py. The last traced rep's Perfetto trace and
+    metrics snapshot are written as CI sample artifacts."""
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=prompt).astype(np.int32)
+               for _ in range(n_requests)]
+
+    def queue():
+        return [Request(i, p, max_new) for i, p in enumerate(prompts)]
+
+    from repro.serve.scheduler import (make_chunk_fns, make_fused_fns,
+                                       make_serve_fns)
+    fns = make_serve_fns(model, cache_len, paged=True)
+    cfns = make_chunk_fns(model, cache_len, chunk, paged=True)
+    ffns = make_fused_fns(model, cache_len, chunk, paged=True)
+    base = dict(n_slots=n_slots, cache_len=cache_len, paged=True,
+                page_block=page_block, chunked_prefill=True, chunk=chunk,
+                prefix_cache=True)
+
+    def fresh(trace: bool):
+        return SlotServer(model, params, serve_fns=fns, chunk_fns=cfns,
+                          fused_fns=ffns,
+                          config=EngineConfig(**base, trace=trace))
+
+    def bench(srv):
+        t0 = time.perf_counter()
+        out = srv.serve(queue())
+        jax.block_until_ready(srv.cache)
+        dt = time.perf_counter() - t0
+        return out, sum(len(v) for v in out.values()) / dt
+
+    bench(fresh(False))
+    bench(fresh(True))                             # warm the jits
+    ratios = []
+    plain_tps = obs_tps = 0.0
+    srv_t = None
+    for _ in range(reps):
+        out_p, tps_p = bench(fresh(False))
+        srv_t = fresh(True)
+        out_t, tps_t = bench(srv_t)
+        assert out_t == out_p, "traced serving diverged from plain"
+        plain_tps, obs_tps = max(plain_tps, tps_p), max(obs_tps, tps_t)
+        ratios.append(tps_p / tps_t)
+    ratio = sorted(ratios)[len(ratios) // 2]
+
+    # sample artifacts from the last traced rep: a Perfetto-loadable
+    # trace + the registry snapshot (CI uploads both)
+    doc = srv_t.export_trace(trace_out)
+    srv_t.export_metrics(metrics_out)
+    events = doc["traceEvents"]
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    n_retired = sum(1 for e in events
+                    if e.get("ph") == "i" and e.get("name") == "retire")
+    assert n_retired == n_requests, (n_retired, n_requests)
+    ttft = srv_t.obs.ttft_s
+
+    result = {
+        "requests": n_requests, "slots": n_slots, "chunk": chunk,
+        "plain_tok_per_s": round(plain_tps, 2),
+        "traced_tok_per_s": round(obs_tps, 2),
+        "obs_overhead_ratio": round(ratio, 3),
+        "trace_events": len(events),
+        "trace_spans": n_spans,
+        "ttft_mean_s": round(float(ttft.value), 4) if ttft.count else 0.0,
+        "obs_parity": True,
+    }
+    print("\n== Serving: telemetry (trace+metrics) overhead ==")
+    print("name,value")
+    print(f"serve_plain_tok_per_s,{plain_tps:.2f}")
+    print(f"serve_traced_tok_per_s,{obs_tps:.2f}")
+    print(f"obs_overhead_ratio,{result['obs_overhead_ratio']}")
+    print(f"trace_events,{len(events)} (spans {n_spans})")
+    print(f"artifacts,{trace_out} {metrics_out}")
     print("parity,exact")
     return result
 
@@ -717,6 +837,7 @@ def main(out_path: str = "BENCH_serve.json"):
         "serve_stream": run_stream(),
         "serve_sanitize": run_sanitize(),
         "serve_speculative": run_speculative(),
+        "serve_obs": run_obs(),
     }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1, sort_keys=True)

@@ -117,6 +117,13 @@ def main() -> None:
     ap.add_argument("--spec-len", type=int, default=4,
                     help="speculative span length L: one committed token "
                          "+ L-1 drafts verified per step (1 = vanilla)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the run to PATH "
+                         "(slot engine; enables span tracing — load the "
+                         "file in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON metrics snapshot of every pod's "
+                         "registry to PATH at exit (slot engine)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route attention through the Pallas decode kernel")
     ap.add_argument("--vocab", type=int, default=512)
@@ -157,7 +164,9 @@ def main() -> None:
             token_budget=args.token_budget, prefix_cache=args.prefix_cache,
             fused_step=not args.no_fused_step, sanitize=args.sanitize,
             use_kernel=args.use_kernel, strategy=args.strategy,
-            speculative=args.speculative, spec_len=args.spec_len)
+            speculative=args.speculative, spec_len=args.spec_len,
+            trace=args.trace_out is not None,
+            metrics=args.metrics_out is not None)
         ecfg.validate(model)
         server = make_engine(model, experts=experts, router=router,
                              config=ecfg)
@@ -182,6 +191,13 @@ def main() -> None:
                     finished[o.rid] = o.token_ids
         out = {i: finished[i] for i in range(args.requests)}
         n_tok = sum(len(v) for v in out.values())
+        if args.trace_out:
+            server.export_trace(args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  "(load in ui.perfetto.dev)")
+        if args.metrics_out:
+            server.export_metrics(args.metrics_out)
+            print(f"metrics snapshot written to {args.metrics_out}")
     else:
         batch = {
             "tokens": jnp.asarray(batch_np["tokens"]),

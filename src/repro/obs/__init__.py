@@ -1,0 +1,19 @@
+"""Engine telemetry: metrics registry, span tracing, Perfetto export.
+
+Host-side only — nothing in this package imports jax or runs inside a
+jitted scope, so it is clean under the ``repro.analysis`` lint by
+construction. See docs/observability.md for the metric catalog and the
+span taxonomy.
+"""
+from repro.obs.engine import EngineObs
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry, log_buckets, prometheus,
+                               snapshot)
+from repro.obs.trace import NullRecorder, TraceRecorder, merge_chrome
+
+__all__ = [
+    "EngineObs",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "log_buckets", "prometheus", "snapshot",
+    "NullRecorder", "TraceRecorder", "merge_chrome",
+]

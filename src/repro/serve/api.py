@@ -153,6 +153,17 @@ class EngineConfig:
     #    vanilla decode; spec_len == 1 IS vanilla decode.
     speculative: Optional[str] = None   # None | "ngram" | "expert"
     spec_len: int = 4
+    # -- telemetry (PR 9): per-request span tracing + metrics exposition
+    #    (repro.obs). ``trace=True`` attaches a bounded ring-buffer span
+    #    recorder (Chrome/Perfetto trace_event export via
+    #    ``engine.export_trace``); ``metrics=True`` publishes the engine's
+    #    private registry to the process-global exposition set
+    #    (``repro.obs.default_registry``). Both default off; the internal
+    #    registry itself is always on (near-zero cost) so ``stats()`` can
+    #    be a view over it.
+    trace: bool = False
+    trace_ring: int = 65536       # span ring capacity (oldest events drop)
+    metrics: bool = False
     # -- misc
     use_kernel: bool = False
     strategy: str = "top1"        # decentralized engines: "top1" | "mixture"
@@ -227,6 +238,10 @@ class EngineConfig:
             raise ValueError(
                 f"spec_len must be >= 1 (1 = vanilla decode, L > 1 "
                 f"verifies L - 1 drafts per step), got {self.spec_len}")
+        if self.trace_ring < 1:
+            raise ValueError(
+                f"trace_ring must be >= 1 (the span recorder is a bounded "
+                f"ring buffer), got {self.trace_ring}")
         if model is not None:
             self._validate_model(model)
 
@@ -284,9 +299,13 @@ class RequestOutput:
     request; ``token_ids`` is the full cumulative output. ``finished`` is
     terminal — after it, the request emits nothing further and its slot,
     pool blocks and prefix-cache references are already released.
-    ``t_submit``/``t_first``/``t_done`` are ``perf_counter`` stamps
-    (``t_done`` is 0.0 until finished): TTFT is ``t_first - t_submit``,
-    inter-token latencies are the diffs of consecutive delta stamps.
+    ``t_submit``/``t_admit``/``t_first``/``t_done`` are ``perf_counter``
+    stamps (``t_admit``/``t_done`` are 0.0 until admitted/finished): TTFT
+    is ``t_first - t_submit`` — measured from *submission*, so admission-
+    backlogged requests report their queue wait, not a flattering
+    from-admission number — and inter-token latencies are the diffs of
+    consecutive delta stamps. ``queued_s`` isolates the queue-delay
+    component of TTFT.
     """
 
     rid: int
@@ -297,6 +316,7 @@ class RequestOutput:
     t_submit: float
     t_first: float
     t_done: float
+    t_admit: float = 0.0
 
     @property
     def ttft(self) -> float:
@@ -304,4 +324,18 @@ class RequestOutput:
         (or if) no token was ever emitted, e.g. a request aborted straight
         out of the waiting queue."""
         return self.t_first - self.t_submit if self.t_first > 0 \
+            else float("nan")
+
+    # the explicit-unit alias; ``ttft`` predates the _s convention
+    @property
+    def ttft_s(self) -> float:
+        return self.ttft
+
+    @property
+    def queued_s(self) -> float:
+        """Seconds the request waited for admission (queue delay — the
+        slice of TTFT spent before the engine even owned it). NaN until
+        admitted; a pool-starved queue shows up here, not as missing
+        TTFT."""
+        return self.t_admit - self.t_submit if self.t_admit > 0 \
             else float("nan")

@@ -50,6 +50,8 @@ from typing import Any, Dict, Hashable, List, Mapping, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 
 def block_keys(tokens: np.ndarray, extras: Dict[str, np.ndarray],
                block_size: int, n_blocks: int, *,
@@ -97,19 +99,61 @@ class PrefixCache:
     ``evict`` when the allocator runs dry.
     """
 
-    def __init__(self, allocator, block_size: int):
+    def __init__(self, allocator, block_size: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.allocator = allocator
         self.block_size = block_size
         self._root = _Node(None, None)
         self._by_block: Dict[int, _Node] = {}
         self._ref: Dict[int, int] = {}
         self._lru: "OrderedDict[int, None]" = OrderedDict()  # oldest first
-        self.lookups = 0
-        self.lookup_tokens = 0
-        self.hit_blocks = 0
-        self.skipped_tokens = 0
-        self.inserted_blocks = 0
-        self.evicted_blocks = 0
+        # hit/evict counters live in the engine's metrics registry (PR 9)
+        # so the exposition endpoints see them; the legacy int attributes
+        # (``lookups``, ``skipped_tokens``, …) remain as read properties
+        # over the same series. A standalone cache gets a private registry.
+        reg = registry if registry is not None else MetricsRegistry()
+        self._c_lookups = reg.counter(
+            "serve_prefix_lookups_total", "admissions matched vs the tree")
+        self._c_lookup_tokens = reg.counter(
+            "serve_prefix_lookup_tokens_total",
+            "prompt positions those admissions carried")
+        self._c_hit_blocks = reg.counter(
+            "serve_prefix_hit_blocks_total",
+            "cached blocks spliced read-only into admissions")
+        self._c_skipped_tokens = reg.counter(
+            "serve_prefix_skipped_tokens_total",
+            "prompt positions served from cache (prefill skipped)")
+        self._c_inserted = reg.counter(
+            "serve_prefix_inserted_blocks_total",
+            "blocks newly tracked at prefill completion")
+        self._c_evicted = reg.counter(
+            "serve_prefix_evicted_blocks_total",
+            "LRU blocks returned to the pool under pressure")
+
+    # legacy counter surface — read-only views over the registry series
+    @property
+    def lookups(self) -> int:
+        return int(self._c_lookups.value)
+
+    @property
+    def lookup_tokens(self) -> int:
+        return int(self._c_lookup_tokens.value)
+
+    @property
+    def hit_blocks(self) -> int:
+        return int(self._c_hit_blocks.value)
+
+    @property
+    def skipped_tokens(self) -> int:
+        return int(self._c_skipped_tokens.value)
+
+    @property
+    def inserted_blocks(self) -> int:
+        return int(self._c_inserted.value)
+
+    @property
+    def evicted_blocks(self) -> int:
+        return int(self._c_evicted.value)
 
     # ------------------------------------------------------------------
     # Tree
@@ -169,7 +213,7 @@ class PrefixCache:
                 self._by_block[b] = child
                 self._ref[b] = 1
                 created += 1
-                self.inserted_blocks += 1
+                self._c_inserted.inc()
             node = child
         return created
 
@@ -198,10 +242,10 @@ class PrefixCache:
     def record(self, width: int, cached: int) -> None:
         """Stats for one successful admission: ``cached`` of the request's
         ``width`` prompt positions were served from the tree."""
-        self.lookups += 1
-        self.lookup_tokens += width
-        self.hit_blocks += cached // self.block_size
-        self.skipped_tokens += cached
+        self._c_lookups.inc()
+        self._c_lookup_tokens.inc(width)
+        self._c_hit_blocks.inc(cached // self.block_size)
+        self._c_skipped_tokens.inc(cached)
 
     # ------------------------------------------------------------------
     # Eviction
@@ -212,7 +256,7 @@ class PrefixCache:
         del self._lru[node.block]
         del self._ref[node.block]
         node.parent.children.pop(node.key)
-        self.evicted_blocks += 1
+        self._c_evicted.inc()
 
     def evict(self, n: int) -> int:
         """Return up to ``n`` least-recently-used unreferenced cached

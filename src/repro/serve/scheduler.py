@@ -117,6 +117,7 @@ one-token step; the trajectory is unchanged, only the step size.
 """
 from __future__ import annotations
 
+import json
 import logging
 import time
 from dataclasses import dataclass, field
@@ -131,6 +132,9 @@ from repro.core.ensemble import (PROB_FLOOR, make_stacked_chunk_fns,
                                  make_stacked_fused, make_stacked_serving,
                                  make_stacked_verify, mix_expert_logits)
 from repro.models.model import Model
+from repro.obs import metrics as _obs_metrics
+from repro.obs.engine import EngineObs
+from repro.obs.trace import ADMIT_TID, merge_chrome
 from repro.serve.api import (EngineConfig, RequestOutput, SamplingParams,
                              TokenDelta, effective_page_block, stop_id_row)
 from repro.serve.fused import (DONE_REASONS, _sample_tokens, argmax_tokens,
@@ -167,10 +171,14 @@ class Request:
     truncated: bool = False       # retired at the context bound, not done
     finish_reason: Optional[str] = None     # set exactly once, at retirement
     t_submit: float = 0.0         # perf_counter at add_request
+    t_admit: float = 0.0          # perf_counter at slot admission (PR 9:
+    #                             # queued_s = t_admit - t_submit)
     t_first: float = 0.0          # perf_counter at the first emitted token
     t_done: float = 0.0           # perf_counter at retirement
     t_tok: List[float] = field(default_factory=list)   # per-token stamps
     emitted: int = 0              # tokens already streamed out via step()
+    spec_req_steps: int = 0       # this request's speculative verify steps
+    spec_req_accepted: int = 0    # draft tokens those steps accepted
 
     def __post_init__(self):
         if self.params is None:
@@ -349,8 +357,13 @@ class _SlotTable:
     def __init__(self, n_slots: int, cache_len: int, *, block_size: int = 0,
                  n_blocks: int = 0, window: int = 0, chunk: int = 0,
                  token_budget: int = 0, prefix_cache: bool = False,
-                 sanitize: bool = False):
+                 sanitize: bool = False, obs: Optional[EngineObs] = None):
         self.n_slots, self.cache_len = n_slots, cache_len
+        # telemetry bundle (PR 9): the always-on per-engine registry plus
+        # the (default no-op) span recorder. stats() and the n_aborted /
+        # n_stopped / n_spec_* back-compat attributes are views over it.
+        self.obs = obs if obs is not None else EngineObs()
+        self.obs.name_tracks(n_slots, f"pod {self.obs.pod}")
         self.pos = np.zeros(n_slots, dtype=np.int32)      # next position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.last_tok = np.zeros(n_slots, dtype=np.int32)
@@ -358,8 +371,6 @@ class _SlotTable:
         self.waiting: List[Request] = []        # submitted, not yet admitted
         self._next_rid = 0                      # auto-assigned request ids
         self._needs_features = False            # mixture/top1 routing input
-        self.n_aborted = 0                      # lifetime abort() count
-        self.n_stopped = 0                      # lifetime stop-token count
         self.chunk = chunk
         self.chunked = chunk > 0
         self.token_budget = token_budget if token_budget > 0 \
@@ -389,8 +400,6 @@ class _SlotTable:
         self._step_span = 1        # decode-write span of the CURRENT step:
         #                          # 1 vanilla, spec_len speculating (the
         #                          # PoolSanitizer and _nb_live read it)
-        self.n_spec_steps = 0      # lifetime speculative dispatches
-        self.n_spec_tokens = 0     # tokens they emitted (>= n_spec_steps)
         self.block_size = block_size
         self.paged = block_size > 0
         if self.paged:
@@ -407,6 +416,8 @@ class _SlotTable:
             if n_blocks <= 0:       # default: full capacity + scratch
                 n_blocks = n_slots * self.nb_slot + 1
             self.allocator = BlockAllocator(n_blocks)
+            self.obs.pool_total_g.set(self.allocator.n_blocks)
+            self.obs.pool_free_g.set(self.allocator.n_free)
             self.block_tables = np.zeros((n_slots, self.nb_slot), np.int32)
             self.n_alloc = np.zeros(n_slots, dtype=np.int32)
             # allocation generation of each mapped entry (use-after-free
@@ -418,7 +429,8 @@ class _SlotTable:
             # flag combinations were vetted by EngineConfig.validate();
             # reaching here with prefix on means paged + chunked are too
             assert self.paged and self.chunked, (block_size, chunk)
-            self.prefix = PrefixCache(self.allocator, block_size)
+            self.prefix = PrefixCache(self.allocator, block_size,
+                                      registry=self.obs.registry)
         # debug-mode dynamic checker over the paged pool (EngineConfig.
         # sanitize / --sanitize): shadows every step with an ownership scan
         self.sanitizer: Optional[PoolSanitizer] = \
@@ -426,6 +438,24 @@ class _SlotTable:
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # lifetime counters, re-implemented as views over the registry (PR 9)
+    # so exposition and stats() can never disagree
+    @property
+    def n_aborted(self) -> int:
+        return self.obs.n_aborted
+
+    @property
+    def n_stopped(self) -> int:
+        return self.obs.n_stopped
+
+    @property
+    def n_spec_steps(self) -> int:
+        return self.obs.n_spec_steps
+
+    @property
+    def n_spec_tokens(self) -> int:
+        return self.obs.n_spec_tokens
 
     @property
     def active(self) -> List[int]:
@@ -469,6 +499,7 @@ class _SlotTable:
         self._next_rid = max(self._next_rid, req.rid + 1)
         req.t_submit = req.t_submit or time.perf_counter()
         self.waiting.append(req)
+        self.obs.submitted.inc()
         return req.rid
 
     def _reject_unservable(self, req: Request) -> None:
@@ -513,6 +544,7 @@ class _SlotTable:
         for req in (self.slot_req[s] for s in range(self.n_slots)):
             if req is not None and req.emitted < len(req.out):
                 outs.append(self._output(req))
+        self._obs_step()
         return outs
 
     def abort(self, rid: int) -> Optional[RequestOutput]:
@@ -552,7 +584,20 @@ class _SlotTable:
     def _finish_aborted(self, req: Request) -> RequestOutput:
         req.finish_reason = "aborted"
         req.t_done = time.perf_counter()
-        self.n_aborted += 1
+        obs = self.obs
+        obs.aborted.inc()
+        tr = obs.trace
+        if tr.enabled:
+            slot = getattr(req, "_obs_slot", None)
+            tid = obs.slot_tid(slot) if slot is not None else ADMIT_TID
+            t0 = getattr(req, "_obs_t_phase", 0.0)
+            if t0:                  # close the phase the abort interrupted
+                tr.complete(getattr(req, "_obs_phase", "decode"), t0,
+                            req.t_done, tid, args={"rid": req.rid})
+            elif req.t_admit == 0.0:   # aborted straight out of the queue
+                tr.async_begin("queued", req.t_submit, req.rid)
+                tr.async_end("queued", req.t_done, req.rid)
+            tr.instant("abort", req.t_done, tid, args={"rid": req.rid})
         return self._output(req)
 
     def _admit_waiting(self) -> None:
@@ -561,13 +606,64 @@ class _SlotTable:
         blocks yet — it retries next step). A request no idle server can
         admit would wait forever: raise instead."""
         while self.waiting and self.free_slots():
-            if not self.admit(self.waiting[0]):
+            req = self.waiting[0]
+            t0 = time.perf_counter()
+            if not self.admit(req):
                 break                # wait for blocks to free up
             self.waiting.pop(0)
+            self._on_admitted(req, t0)
         if self.waiting and not self.active:
             raise RuntimeError(
                 f"cannot admit request {self.waiting[0].rid} even on an "
                 f"idle server — the KV block pool is too small for it")
+
+    def _on_admitted(self, req: Request, t0: float) -> None:
+        """Telemetry boundary for one successful admission: stamp
+        ``t_admit`` (queue delay ends here), close the request's
+        ``queued`` span, and open its slot-resident phase. Requests that
+        retired inside ``admit()`` (context-filling prompts, max_new == 1)
+        clamp the admission span to their ``t_done`` so a request's spans
+        always sum to its end-to-end latency."""
+        t1 = req.t_done if req.finish_reason is not None \
+            else time.perf_counter()
+        req.t_admit = t0
+        obs = self.obs
+        obs.admitted.inc()
+        obs.queued_s.observe(t0 - req.t_submit)
+        slot = next((s for s, r in enumerate(self.slot_req) if r is req),
+                    None)
+        if req.finish_reason is None and slot is not None:
+            # phase bookkeeping rides the Request (host-only attributes):
+            # the retirement path closes the open phase span from these
+            req._obs_slot = slot
+            req._obs_phase = "prefill" if self.prefilling[slot] \
+                else "decode"
+            req._obs_t_phase = t1
+        tr = obs.trace
+        if tr.enabled:
+            tr.async_begin("queued", req.t_submit, req.rid,
+                           args={"rid": req.rid})
+            tr.async_end("queued", t0, req.rid)
+            tid = obs.slot_tid(slot) if slot is not None else ADMIT_TID
+            tr.complete("admission", t0, t1, tid, args={"rid": req.rid})
+
+    def _obs_step(self) -> None:
+        """Per-step telemetry epilogue: bump the step counter and refresh
+        the occupancy/pool gauges (plus, tracing, one "C" counter sample
+        that Perfetto renders as timeline graphs)."""
+        obs = self.obs
+        obs.steps.inc()
+        n_act, n_wait = len(self.active), len(self.waiting)
+        obs.active_g.set(n_act)
+        obs.waiting_g.set(n_wait)
+        if self.paged:
+            obs.pool_free_g.set(self.allocator.n_free)
+        tr = obs.trace
+        if tr.enabled:
+            vals = {"active": n_act, "waiting": n_wait}
+            if self.paged:
+                vals["pool_free_blocks"] = self.allocator.n_free
+            tr.counter("engine", time.perf_counter(), vals)
 
     def _output(self, req: Request) -> RequestOutput:
         """Build the streaming update for ``req`` (tokens newly decoded
@@ -581,7 +677,7 @@ class _SlotTable:
             rid=req.rid, deltas=deltas, token_ids=list(req.out),
             finished=req.finish_reason is not None,
             finish_reason=req.finish_reason, t_submit=req.t_submit,
-            t_first=req.t_first, t_done=req.t_done)
+            t_first=req.t_first, t_done=req.t_done, t_admit=req.t_admit)
 
     def _prefill_width(self, req: Request) -> int:
         """Decoder positions a request's prefill consumes (so admission can
@@ -795,6 +891,7 @@ class _SlotTable:
         req.record(first_tok)
         req.t_done = time.perf_counter()
         self._set_reason(req, req.reason_now() or "truncated")
+        self._obs_retired(None, req)
         self.admit_retired.append(req)
 
     def _set_reason(self, req: Request, reason: str) -> None:
@@ -802,8 +899,31 @@ class _SlotTable:
         ``truncated`` flag in sync) and bump the per-reason counters."""
         req.finish_reason = reason
         req.truncated = reason == "truncated"
-        if reason == "stop":
-            self.n_stopped += 1
+        self.obs.retired(reason).inc()
+
+    def _obs_retired(self, slot: Optional[int], req: Request) -> None:
+        """Telemetry boundary for one retirement (``t_done`` already
+        stamped): latency histograms, the per-request speculative accept
+        rate, and — tracing — the close of the open phase span plus a
+        ``retire`` instant carrying the finish reason."""
+        obs = self.obs
+        obs.e2e_s.observe(req.t_done - req.t_submit)
+        if req.t_first > 0:
+            obs.ttft_s.observe(req.t_first - req.t_submit)
+        if req.spec_req_steps and self.spec_len > 1:
+            obs.req_accept_rate.observe(
+                req.spec_req_accepted
+                / (req.spec_req_steps * (self.spec_len - 1)))
+        tr = obs.trace
+        if tr.enabled:
+            tid = obs.slot_tid(slot) if slot is not None else ADMIT_TID
+            t0 = getattr(req, "_obs_t_phase", 0.0)
+            if t0:
+                tr.complete(getattr(req, "_obs_phase", "decode"), t0,
+                            req.t_done, tid, args={"rid": req.rid})
+            tr.instant("retire", req.t_done, tid,
+                       args={"rid": req.rid,
+                             "finish_reason": req.finish_reason})
 
     def _drain_admit_retired(self) -> List[Request]:
         out, self.admit_retired = self.admit_retired, []
@@ -847,6 +967,7 @@ class _SlotTable:
         finish reason, release the slot (and its blocks)."""
         self._set_reason(req, reason)
         req.t_done = time.perf_counter()
+        self._obs_retired(slot, req)
         self._release(slot)
 
     # ------------------------------------------------------------------
@@ -976,15 +1097,22 @@ class _SlotTable:
             slot, xc, start, length, cbt = self._chunk_args()
             pick = self._pick_args(self.slot_req[slot])
             if not dec:
+                t0 = time.perf_counter()
                 first = self._run_chunk_only(slot, xc, start, length, cbt,
                                              pick)
-                return self._after_chunk_tok(
+                t1 = self._obs_chunk_span(slot, start, t0)
+                retired = self._after_chunk_tok(
                     slot, length, lambda: int(jax.device_get(first)[0]))
+                self.obs.step_timing("chunk", t0, t1)
+                return retired
             self._grow_active()
             st = self._device_state()
+            t0 = time.perf_counter()
             nxt, done, first = self._run_fused_chunk(st, slot, xc, start,
                                                      length, cbt, pick)
+            t1 = self._obs_chunk_span(slot, start, t0)
             nxt_h, done_h, first_h = jax.device_get((nxt, done, first))
+            self.obs.step_timing("decode+chunk", t0, t1)
             retired = self._advance_fused(dec, nxt_h, done_h)
             retired += self._after_chunk_tok(slot, length,
                                              lambda: int(first_h[0]))
@@ -996,9 +1124,38 @@ class _SlotTable:
             # pool can't cover the span this step: vanilla single token
         self._grow_active()
         st = self._device_state()
+        t0 = time.perf_counter()
         nxt, done = self._run_fused(st)
+        t1 = time.perf_counter()
         nxt_h, done_h = jax.device_get((nxt, done))
+        self.obs.step_timing("decode", t0, t1)
         return self._advance_fused(dec, nxt_h, done_h)
+
+    def _obs_chunk_span(self, slot: int, start: int, t0: float) -> float:
+        """Stamp the end of a chunk dispatch and (tracing) emit its
+        ``prefill_chunk[i]`` span on the slot's track. Returns the stamp —
+        the dispatch half of the step timing."""
+        t1 = time.perf_counter()
+        tr = self.obs.trace
+        if tr.enabled:
+            req = self.slot_req[slot]
+            tr.complete(f"prefill_chunk[{start // self.chunk}]", t0, t1,
+                        self.obs.slot_tid(slot),
+                        args={"rid": req.rid, "start": start})
+        return t1
+
+    def _obs_phase_flip(self, slot: int, req: Request) -> None:
+        """Prefill → decode transition: close the request's ``prefill``
+        span and open its ``decode`` phase at the same stamp (phases share
+        boundaries, so a request's spans tile its latency exactly)."""
+        t = time.perf_counter()
+        t0 = getattr(req, "_obs_t_phase", 0.0)
+        tr = self.obs.trace
+        if tr.enabled and t0:
+            tr.complete("prefill", t0, t, self.obs.slot_tid(slot),
+                        args={"rid": req.rid})
+        req._obs_phase = "decode"
+        req._obs_t_phase = t
 
     # ------------------------------------------------------------------
     # Speculative decoding: draft + multi-token verify (repro.serve.
@@ -1019,8 +1176,11 @@ class _SlotTable:
         self._step_span = span       # sanitizer plan + _nb_live horizon
         st = self._device_state()
         drafts = self._draft_tokens(dec) if self._ngram is not None else None
+        t0 = time.perf_counter()
         toks, n_emit, done = self._run_verify(st, drafts)
+        t1 = time.perf_counter()
         toks_h, n_h, done_h = jax.device_get((toks, n_emit, done))
+        self.obs.step_timing("spec_verify", t0, t1)
         return self._advance_span(dec, toks_h, n_h, done_h)
 
     def _draft_tokens(self, dec: List[int]) -> Array:
@@ -1052,6 +1212,8 @@ class _SlotTable:
         exactly once — ``stats()['stopped']`` counts it once too."""
         retired = []
         t = time.perf_counter()
+        obs = self.obs
+        accepted = 0
         for slot in dec:
             req = self.slot_req[slot]
             n = int(n_emit[slot])
@@ -1060,8 +1222,14 @@ class _SlotTable:
             self.pos[slot] += n
             if n:
                 self.last_tok[slot] = toks[slot, n - 1]
-            self.n_spec_steps += 1
-            self.n_spec_tokens += n
+            obs.spec_steps.inc()
+            obs.spec_tokens.inc(n)
+            obs.accept_len.observe(n)
+            # per-request diagnostics: n - 1 of the step's spec_len - 1
+            # drafts were accepted (the first token is the committed one)
+            req.spec_req_steps += 1
+            req.spec_req_accepted += max(n - 1, 0)
+            accepted += max(n - 1, 0)
             d = int(done[slot])
             if d:
                 reason = DONE_REASONS[d]
@@ -1070,6 +1238,10 @@ class _SlotTable:
                     (slot, reason, req.reason_now())
                 self._retire_from_slot(slot, req, reason)
                 retired.append(req)
+        if dec and self.spec_len > 1:
+            src = self.speculative or "ngram"
+            obs.drafts(src, "proposed").inc(len(dec) * (self.spec_len - 1))
+            obs.drafts(src, "accepted").inc(accepted)
         return retired
 
     # ------------------------------------------------------------------
@@ -1128,9 +1300,14 @@ class _SlotTable:
     # ------------------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
-        """Serving stats: active slots, waiting depth, lifetime
-        aborted/stopped counters, pool free blocks, prefix-cache hit rate
-        — the numbers the serve log and ``occupancy()`` surface."""
+        """Serving stats: active slots, waiting depth, aborted/stopped
+        counters, pool free blocks, prefix-cache hit rate — the numbers
+        the serve log and ``occupancy()`` surface. Since PR 9 this is a
+        *view* over the engine's metrics registry (``self.metrics``) —
+        same keys and values as ever, one source of truth underneath.
+        The aborted/stopped counters are per-``serve()``-run (each drain
+        loop starts by ``reset_stats()``); driving ``step()`` directly
+        accumulates them until ``reset_stats()`` is called."""
         out: Dict[str, Any] = {"active": len(self.active),
                                "waiting": len(self.waiting),
                                "aborted": self.n_aborted,
@@ -1149,6 +1326,47 @@ class _SlotTable:
         if self.sanitizer is not None:
             out.update(self.sanitizer.stats())
         return out
+
+    @property
+    def metrics(self) -> _obs_metrics.MetricsRegistry:
+        """The engine's private metrics registry (always live; published
+        to ``repro.obs.default_registry()`` when the config set
+        ``metrics=True``)."""
+        return self.obs.registry
+
+    def reset_stats(self) -> None:
+        """Documented per-run counter hygiene: zero the request-lifecycle
+        counters (``aborted`` and the per-reason retirement counters
+        behind ``stopped``) so back-to-back ``serve()`` runs on one
+        engine never report a previous run's terminal counts. Cumulative
+        telemetry — latency histograms, speculative and prefix-cache
+        totals — is untouched; zero *everything* with the registry-wide
+        ``engine.metrics.reset()``."""
+        self.obs.reset_run_counters()
+
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """The recorded span trace as a Chrome/Perfetto ``trace_event``
+        JSON object (empty unless the engine was built with
+        ``EngineConfig(trace=True)``). Load the written file directly in
+        ``ui.perfetto.dev`` or ``chrome://tracing``."""
+        doc = self.obs.trace.to_chrome()
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc
+
+    def export_metrics(self, path: Optional[str] = None) -> dict:
+        """JSON snapshot of the engine's metrics registry (optionally
+        written to ``path``). Prometheus text is ``prometheus_metrics``."""
+        doc = self.obs.registry.to_dict()
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=1)
+        return doc
+
+    def prometheus_metrics(self) -> str:
+        """Prometheus text exposition of this engine's registry."""
+        return self.obs.registry.to_prometheus()
 
     # ------------------------------------------------------------------
     # Chunked prefill: admission, chunk scheduling, decode transition
@@ -1179,7 +1397,14 @@ class _SlotTable:
                 req._prefix_keys = (self.block_size, keys)
             else:
                 keys = cached[1]
+            tr = self.obs.trace
+            t_m0 = time.perf_counter() if tr.enabled else 0.0
             shared = self.prefix.match(keys, width)
+            if tr.enabled:
+                tr.complete("prefix_match", t_m0, time.perf_counter(),
+                            self.obs.slot_tid(slot),
+                            args={"rid": req.rid,
+                                  "hit_blocks": len(shared)})
             base = len(shared) * self.block_size
         if self.paged and not self._reserve(slot, width, shared=shared):
             return False
@@ -1314,6 +1539,7 @@ class _SlotTable:
                                    req.reason_now() or "truncated")
             return [req]
         self.cache = self.spec.insert_direct(self.cache, carry, slot)
+        self._obs_phase_flip(slot, req)
         self._occupy(slot, req, first, width)
         reason = req.reason_now()        # max_new == 1, or first tok stops
         if reason:
@@ -1342,6 +1568,11 @@ class _SlotTable:
         incremental API (``add_request`` everything, ``step`` until
         nothing is unfinished, collect the finished outputs).
 
+        Each run starts with ``reset_stats()``: the ``aborted``/
+        ``stopped`` counts ``stats()`` reports afterwards are THIS run's,
+        never stale totals accumulated across earlier ``serve()`` calls
+        on the same engine.
+
         Admission can fail transiently on a paged server (not enough free
         KV blocks yet) — the request stays pending until retirements free
         blocks. Exhausting ``max_steps`` with unfinished requests raises
@@ -1349,6 +1580,7 @@ class _SlotTable:
         progress, including mid-prefill requests with their partial
         position.
         """
+        self.reset_stats()
         for req in queue:
             self.add_request(req)
         finished: Dict[int, List[int]] = {}
@@ -1527,7 +1759,7 @@ class SlotServer(_SlotTable):
                  chunk: int = 0, token_budget: int = 0, chunk_fns=None,
                  prefix_cache: bool = False, fused_step: bool = True,
                  fused_fns=None, verify_fns=None,
-                 config: Optional[EngineConfig] = None):
+                 config: Optional[EngineConfig] = None, pod: int = 0):
         if config is None:
             config = _legacy_config(
                 n_slots, cache_len, page_block=page_block,
@@ -1547,7 +1779,10 @@ class SlotServer(_SlotTable):
                          token_budget=config.token_budget,
                          prefix_cache=config.prefix_cache
                          and model.prefix_cacheable,
-                         sanitize=config.sanitize)
+                         sanitize=config.sanitize,
+                         obs=EngineObs(pod=pod, trace=config.trace,
+                                       trace_ring=config.trace_ring,
+                                       publish=config.metrics))
         self.model, self.params = model, params
         self.use_kernel = use_kernel
         if self.paged:
@@ -1689,7 +1924,7 @@ class MixtureSlotServer(_SlotTable):
                  pool_blocks: int = 0, chunk: int = 0,
                  token_budget: int = 0, prefix_cache: bool = False,
                  fused_step: bool = True,
-                 config: Optional[EngineConfig] = None):
+                 config: Optional[EngineConfig] = None, pod: int = 0):
         if config is None:
             config = _legacy_config(
                 n_slots, cache_len, page_block=page_block,
@@ -1710,7 +1945,10 @@ class MixtureSlotServer(_SlotTable):
                          token_budget=config.token_budget,
                          prefix_cache=config.prefix_cache
                          and model.prefix_cacheable,
-                         sanitize=config.sanitize)
+                         sanitize=config.sanitize,
+                         obs=EngineObs(pod=pod, trace=config.trace,
+                                       trace_ring=config.trace_ring,
+                                       publish=config.metrics))
         self._seq_axis = 2      # embedded prompts carry K at axis 0
         self._from_probs = True  # the mixed scores are Eq. 27 probabilities
         self._needs_features = True   # admission routes on features
@@ -1941,13 +2179,16 @@ class DecentralizedSlotServer:
                 if (config.speculative is not None and config.spec_len > 1
                     and config.fused_step and eff_block > 0
                     and model.speculative_capable) else None
+            # pod=k labels each pod's registry/trace track (pid=k in the
+            # merged Perfetto export) so per-expert load is attributable
             self.pods = [SlotServer(model, p, config=config,
                                     serve_fns=fns, chunk_fns=cfns,
-                                    fused_fns=ffns, verify_fns=vfns)
-                         for p in expert_params]
+                                    fused_fns=ffns, verify_fns=vfns,
+                                    pod=k)
+                         for k, p in enumerate(expert_params)]
         else:
             self.core = MixtureSlotServer(model, expert_params, router,
-                                          config=config)
+                                          config=config, pod=0)
 
     def route(self, queue: List[Request]) -> np.ndarray:
         feats = np.stack([r.features for r in queue])
@@ -2015,6 +2256,7 @@ class DecentralizedSlotServer:
             return {}
         if self.strategy == "mixture":
             return self.core.serve(queue, max_steps=max_steps)
+        self.reset_stats()
         for req in queue:
             self.add_request(req)
         finished: Dict[int, List[int]] = {}
@@ -2043,6 +2285,44 @@ class DecentralizedSlotServer:
         the cache is on."""
         pods = [self.core] if self.strategy == "mixture" else self.pods
         return [p.stats() for p in pods]
+
+    # ------------------------------------------------------------------
+    # Observability (see docs/observability.md)
+    # ------------------------------------------------------------------
+
+    def _engines(self) -> List[_SlotTable]:
+        return [self.core] if self.strategy == "mixture" else self.pods
+
+    def reset_stats(self) -> None:
+        """Per-run counter hygiene across every pod (see
+        ``_SlotTable.reset_stats``); ``serve()`` calls this at entry."""
+        for p in self._engines():
+            p.reset_stats()
+
+    def export_trace(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Merged Chrome/Perfetto trace over every pod — each pod keeps
+        its own ``pid``, so ui.perfetto.dev shows one process group per
+        expert pod. Written to ``path`` when given."""
+        doc = merge_chrome([p.obs.trace for p in self._engines()])
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc
+
+    def export_metrics(self, path: Optional[str] = None) -> Dict[str, Any]:
+        """Merged metrics snapshot over every pod's registry (series stay
+        distinguished by their ``pod`` label)."""
+        doc = _obs_metrics.snapshot([p.obs.registry
+                                     for p in self._engines()])
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f, indent=2)
+        return doc
+
+    def prometheus_metrics(self) -> str:
+        """Prometheus text exposition over every pod's registry."""
+        return _obs_metrics.prometheus([p.obs.registry
+                                        for p in self._engines()])
 
 
 def make_engine(model: Model, params: Any = None, *,
