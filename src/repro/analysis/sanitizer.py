@@ -69,7 +69,10 @@ class PoolSanitizer:
                              for s in t.decoding]
         self._chunk_plan = None
         if t.chunked and t.prefill_order and t._schedule_chunk():
-            slot = t.prefill_order[0]
+            # _pick_chunk_slot caches its pick for the step, so this
+            # shadow replay and the dispatch see the same slot without
+            # double-charging the QoS tenant scheduler
+            slot = t._pick_chunk_slot()
             start = int(t.prefill_pos[slot])
             length = min(t.chunk, int(t.prefill_width[slot]) - start)
             self._chunk_plan = (slot, t.slot_req[slot].rid, start, length)
@@ -167,8 +170,15 @@ class PoolSanitizer:
                     f"block {pb} mapped writable into {len(slots)} slots "
                     f"({slots}) without a prefix-cache refcount — "
                     "write-aliasing between requests")
+        # preemption-parked requests hold prefix references with no slot
+        # table mapping them (the pin that keeps their prefix resident
+        # across the park) — phantom holders for the drift check below
+        pins: Dict[int, int] = {}
+        for st in getattr(t, "_parked", {}).values():
+            for pb in st.pinned:
+                pins[pb] = pins.get(pb, 0) + 1
         for pb, ref in tracked.items():
-            n_hold = len(holders.get(pb, ()))
+            n_hold = len(holders.get(pb, ())) + pins.get(pb, 0)
             if pb in free:
                 self._violate(
                     f"cache-tracked block {pb} (refcount {ref}) is on the "
@@ -176,8 +186,9 @@ class PoolSanitizer:
             if ref != n_hold:
                 self._violate(
                     f"refcount drift on cached block {pb}: refcount {ref} "
-                    f"but {n_hold} slot table(s) map it "
-                    f"({holders.get(pb, [])})")
+                    f"but {n_hold} holder(s) — slot table(s) "
+                    f"{holders.get(pb, [])} + {pins.get(pb, 0)} parked "
+                    "pin(s)")
             if ref == 0 and pb not in lru:
                 self._violate(
                     f"cached block {pb} has refcount 0 but is not on the "

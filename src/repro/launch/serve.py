@@ -36,7 +36,7 @@ from repro.configs.base import ARCH_IDS, get_smoke_config
 from repro.core.router import CentroidRouter, RouterConfig
 from repro.data.synthetic import SyntheticConfig, SyntheticMultimodal
 from repro.models import build_model
-from repro.serve.api import EngineConfig, SamplingParams
+from repro.serve.api import EngineConfig, QoSConfig, SamplingParams
 from repro.serve.ensemble_engine import DecentralizedServer
 from repro.serve.scheduler import make_engine
 
@@ -97,6 +97,46 @@ def main() -> None:
                     help="drive the incremental add_request/step API and "
                          "print per-token deltas as they decode "
                          "(slot engine)")
+    ap.add_argument("--preemption", choices=["off", "recompute", "swap"],
+                    default="off",
+                    help="paged-block preemption: under pool pressure a "
+                         "lower-priority decoding request is evicted — "
+                         "'recompute' drops its private blocks and replays "
+                         "its tokens through chunked prefill at resume "
+                         "(needs --chunked-prefill), 'swap' parks their "
+                         "contents host-side and scatters them back (needs "
+                         "--paged). Resumed output is token-for-token "
+                         "identical either way")
+    ap.add_argument("--tenant-weight", action="append", default=None,
+                    metavar="NAME=W",
+                    help="QoS fair-share weight for a tenant (repeatable): "
+                         "admission and prefill-chunk bandwidth are split "
+                         "across tenants by deficit round robin in "
+                         "proportion to these weights (unlisted tenants "
+                         "weigh 1.0); FCFS order is kept within a tenant")
+    ap.add_argument("--qos-quantum", type=int, default=0,
+                    help="DRR credit per round in prompt tokens "
+                         "(0 → the prefill chunk size)")
+    ap.add_argument("--admit-lookahead", type=int, default=0,
+                    help="bounded admission skip-ahead window past an "
+                         "unservable queue head (0 → default 8)")
+    ap.add_argument("--max-predicted-ttft", type=float, default=0.0,
+                    help="SLO admission control: reject a submission "
+                         "(finish_reason='rejected') when its predicted "
+                         "TTFT from the live token backlog exceeds this "
+                         "many seconds (0 → disabled; needs "
+                         "--chunked-prefill)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="reject submissions once the waiting queue is "
+                         "this deep (0 → unbounded)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="assign synthetic requests round-robin to this "
+                         "many tenants (tenant-0, tenant-1, …) to exercise "
+                         "the QoS fair-share path")
+    ap.add_argument("--priorities", type=int, action="append", default=None,
+                    help="request priority cycle (repeatable): request i "
+                         "gets the i-th value mod the list length — higher "
+                         "preempts lower under pool pressure")
     ap.add_argument("--sanitize", action="store_true",
                     help="debug mode: run the PoolSanitizer — a per-step "
                          "ownership scan over the paged block pool "
@@ -157,12 +197,24 @@ def main() -> None:
     if args.engine == "slots":
         # every flag lands in ONE validated config — bad combinations
         # raise a single actionable ValueError before any compilation
+        qos = None
+        if (args.tenant_weight or args.qos_quantum or args.admit_lookahead
+                or args.max_predicted_ttft or args.max_waiting):
+            weights = tuple(
+                (name, float(w)) for name, _, w in
+                (s.partition("=") for s in (args.tenant_weight or ())))
+            qos = QoSConfig(
+                tenant_weights=weights, quantum=args.qos_quantum,
+                admit_lookahead=args.admit_lookahead or 8,
+                max_predicted_ttft_s=args.max_predicted_ttft,
+                max_waiting=args.max_waiting)
         ecfg = EngineConfig(
             n_slots=args.slots, cache_len=cache_len, paged=args.paged,
             page_block=args.page_block, pool_blocks=args.pool_blocks,
             chunked_prefill=args.chunked_prefill, chunk=args.prefill_chunk,
             token_budget=args.token_budget, prefix_cache=args.prefix_cache,
             fused_step=not args.no_fused_step, sanitize=args.sanitize,
+            qos=qos, preemption=args.preemption,
             use_kernel=args.use_kernel, strategy=args.strategy,
             speculative=args.speculative, spec_len=args.spec_len,
             trace=args.trace_out is not None,
@@ -172,10 +224,14 @@ def main() -> None:
                              config=ecfg)
 
         def sp(i: int) -> SamplingParams:
+            prios = args.priorities or (0,)
             return SamplingParams(
                 max_new=args.new_tokens, temperature=args.slot_temperature,
                 top_k=args.slot_top_k, seed=args.seed + i,
-                stop_token_ids=tuple(args.stop_token or ()))
+                stop_token_ids=tuple(args.stop_token or ()),
+                priority=prios[i % len(prios)],
+                tenant=f"tenant-{i % max(args.tenants, 1)}"
+                if args.tenants > 1 else "default")
 
         for i in range(args.requests):
             server.add_request(batch_np["tokens"][i], sp(i), rid=i,

@@ -220,6 +220,51 @@ class CacheSpec:
                 cache, self.batch_axes)
         return jax.jit(f)
 
+    def swap_out(self, cache, slot: int, blocks):
+        """Read one slot's paged decode state out for host-side parking
+        (QoS preemption by swap): pool leaves gather the listed physical
+        blocks' contents (``take`` cannot do this — it slices batch axes,
+        and a pool leaf's batch axis is the *block* axis shared by every
+        slot); direct leaves slice the slot's row, extent 1 preserved.
+        The payload pytree mirrors the cache and round-trips through
+        ``swap_in``. Not jitted: parking is rare and the block count
+        varies per victim, so a trace per count would cost more than the
+        per-leaf dispatches."""
+        assert self.paged is not None, "swap_out needs a paged spec"
+        blocks = jnp.asarray(blocks, jnp.int32)
+
+        def one(full, b_ax, s_ax):
+            if s_ax < 0:
+                return jax.lax.dynamic_slice_in_dim(full, slot, 1,
+                                                    axis=b_ax)
+            # pool leaf: (..., P, bs, ...) with the block axis at b_ax
+            idx = (slice(None),) * b_ax + (blocks,)
+            return full[idx]
+
+        return jax.tree.map(one, cache, self.batch_axes,
+                            self.paged.seq_axes)
+
+    def swap_in(self, cache, payload, slot: int, blocks):
+        """Scatter a ``swap_out`` payload back: pool-leaf contents land in
+        the (freshly allocated) physical blocks listed in ``blocks`` —
+        positionally matching the payload's gather order — and direct
+        leaves overwrite the resumed slot's row. ``slot``/``blocks`` need
+        not match the ones swapped out; the block *table* mapping logical
+        to physical order is the caller's to rebuild."""
+        assert self.paged is not None, "swap_in needs a paged spec"
+        blocks = jnp.asarray(blocks, jnp.int32)
+
+        def one(full, row, b_ax, s_ax):
+            row = jnp.asarray(row, full.dtype)
+            if s_ax < 0:
+                return jax.lax.dynamic_update_slice_in_dim(full, row, slot,
+                                                           axis=b_ax)
+            idx = (slice(None),) * b_ax + (blocks,)
+            return full.at[idx].set(row)
+
+        return jax.tree.map(one, cache, payload, self.batch_axes,
+                            self.paged.seq_axes)
+
 
 @dataclass
 class Model:

@@ -108,6 +108,11 @@ class EngineObs:
             "per-request draft acceptance rate at retirement",
             bounds=RATE_BUCKETS)
         self._drafts: Dict[str, Dict[str, _m.Counter]] = {}
+        # -- multi-tenant QoS (lazily-resolved tenant-labelled counters) --
+        self._tenant_tokens: Dict[str, _m.Counter] = {}
+        self._preempted: Dict[str, _m.Counter] = {}
+        self._resumed: Dict[str, _m.Counter] = {}
+        self._rejected: Dict[str, _m.Counter] = {}
 
     # -- labelled lazily-resolved counters --------------------------------
     def retired(self, reason: str) -> _m.Counter:
@@ -131,6 +136,56 @@ class EngineObs:
                 f"draft tokens {kind}, by draft source",
                 labels={"source": source})
             by_kind[kind] = c
+        return c
+
+    def tenant_tokens(self, tenant: str) -> _m.Counter:
+        """`serve_tenant_tokens_total{tenant=...}` — tokens emitted for
+        the tenant's retired requests (live requests are added by
+        ``stats()`` on top of this cumulative base)."""
+        c = self._tenant_tokens.get(tenant)
+        if c is None:
+            c = self.registry.counter(
+                "serve_tenant_tokens_total",
+                "tokens emitted, by tenant (counted at retirement)",
+                labels={"tenant": tenant})
+            self._tenant_tokens[tenant] = c
+        return c
+
+    def preempted(self, tenant: str, mode: str) -> _m.Counter:
+        """`serve_preemptions_total{tenant=,mode=}` — requests parked
+        (swap/recompute) or bounced back mid-prefill (requeue)."""
+        key = f"{tenant}\x00{mode}"
+        c = self._preempted.get(key)
+        if c is None:
+            c = self.registry.counter(
+                "serve_preemptions_total",
+                "decoding/prefilling requests preempted, by tenant + mode",
+                labels={"tenant": tenant, "mode": mode})
+            self._preempted[key] = c
+        return c
+
+    def resumed(self, tenant: str) -> _m.Counter:
+        """`serve_resumes_total{tenant=...}` — preempted requests
+        re-admitted into a slot."""
+        c = self._resumed.get(tenant)
+        if c is None:
+            c = self.registry.counter(
+                "serve_resumes_total",
+                "preempted requests re-admitted, by tenant",
+                labels={"tenant": tenant})
+            self._resumed[tenant] = c
+        return c
+
+    def rejected(self, tenant: str) -> _m.Counter:
+        """`serve_rejections_total{tenant=...}` — submissions refused by
+        admission control (finish_reason="rejected")."""
+        c = self._rejected.get(tenant)
+        if c is None:
+            c = self.registry.counter(
+                "serve_rejections_total",
+                "submissions refused by admission control, by tenant",
+                labels={"tenant": tenant})
+            self._rejected[tenant] = c
         return c
 
     # -- aggregate views used by stats() ----------------------------------

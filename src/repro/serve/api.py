@@ -40,9 +40,11 @@ from typing import FrozenSet, List, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["EngineConfig", "RequestOutput", "SamplingParams", "TokenDelta",
-           "FINISH_REASONS", "STOP_PAD", "effective_page_block",
-           "stop_id_row"]
+from repro.serve.qos import QoSConfig
+
+__all__ = ["EngineConfig", "QoSConfig", "RequestOutput", "SamplingParams",
+           "TokenDelta", "FINISH_REASONS", "STOP_PAD",
+           "effective_page_block", "stop_id_row"]
 
 #: Pad value for the device-side per-slot stop-id matrix. Token ids are
 #: non-negative, so pad entries can never match a decoded token.
@@ -54,7 +56,9 @@ STOP_PAD = -1
 #:   aborted   — ``abort(rid)`` cancelled it (queued, mid-prefill or
 #:               mid-decode)
 #:   truncated — hit the serving context bound ``cache_len`` first
-FINISH_REASONS = ("length", "stop", "aborted", "truncated")
+#:   rejected  — admission control refused it at submission (queue depth
+#:               or predicted-TTFT SLO, see ``QoSConfig``); no tokens
+FINISH_REASONS = ("length", "stop", "aborted", "truncated", "rejected")
 
 
 @dataclass(frozen=True)
@@ -72,6 +76,14 @@ class SamplingParams:
     into the same set) retire the request as soon as one is *generated*
     (prompt tokens never trigger), with ``finish_reason == "stop"``. The
     stop token itself is kept in the output.
+
+    ``tenant`` names the fair-share accounting bucket and ``priority``
+    (higher = more urgent) arms preemption: under pool pressure a
+    strictly-lower-priority decoding request may be parked to make room
+    (see ``QoSConfig`` / ``EngineConfig.preemption``). Neither affects
+    the tokens a request produces — seeded sampling draws from
+    ``fold_in(seed, token_index)``, so a preempted-and-resumed request
+    replays token-for-token.
     """
 
     max_new: int = 16
@@ -80,6 +92,8 @@ class SamplingParams:
     seed: int = 0
     stop_token_ids: Tuple[int, ...] = ()
     eos_token_id: Optional[int] = None
+    priority: int = 0
+    tenant: str = "default"
 
     def __post_init__(self):
         if self.max_new < 1:
@@ -89,6 +103,8 @@ class SamplingParams:
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0 (0 = full vocabulary), "
                              f"got {self.top_k}")
+        if not self.tenant:
+            raise ValueError("tenant must be a non-empty string")
         stops = frozenset(int(t) for t in self.stop_token_ids)
         if self.eos_token_id is not None:
             stops |= {int(self.eos_token_id)}
@@ -164,6 +180,14 @@ class EngineConfig:
     trace: bool = False
     trace_ring: int = 65536       # span ring capacity (oldest events drop)
     metrics: bool = False
+    # -- multi-tenant QoS (PR 10): deficit-round-robin fair sharing over
+    #    tenants + SLO-aware admission control (repro.serve.qos), and
+    #    priority preemption of decoding requests under pool pressure:
+    #    "swap" parks the victim's private KV blocks host-side, "recompute"
+    #    drops them and replays through chunked prefill + the prefix cache.
+    #    Either way resumed requests are token-for-token identical.
+    qos: Optional[QoSConfig] = None
+    preemption: str = "off"       # "off" | "recompute" | "swap"
     # -- misc
     use_kernel: bool = False
     strategy: str = "top1"        # decentralized engines: "top1" | "mixture"
@@ -242,6 +266,25 @@ class EngineConfig:
             raise ValueError(
                 f"trace_ring must be >= 1 (the span recorder is a bounded "
                 f"ring buffer), got {self.trace_ring}")
+        if self.preemption not in ("off", "recompute", "swap"):
+            raise ValueError(
+                f"preemption must be 'off', 'recompute' or 'swap', got "
+                f"{self.preemption!r}")
+        if self.preemption != "off" and not self.paged:
+            raise ValueError(
+                "preemption parks/drops a victim's paged KV blocks — "
+                "enable paging (page_block > 0)")
+        if self.preemption == "recompute" and not self.chunked_prefill:
+            raise ValueError(
+                "preemption='recompute' resumes victims through chunked "
+                "prefill — enable chunked_prefill (chunk > 0), or use "
+                "preemption='swap'")
+        if self.qos is not None and self.qos.max_predicted_ttft_s > 0 \
+                and not self.chunked_prefill:
+            raise ValueError(
+                "the predicted-TTFT admission model meters the chunked-"
+                "prefill token budget — max_predicted_ttft_s needs "
+                "chunked_prefill=True (max_waiting works without it)")
         if model is not None:
             self._validate_model(model)
 
@@ -249,6 +292,18 @@ class EngineConfig:
         cfg = model.cfg
         eff_block = effective_page_block(
             model, self.page_block if self.paged else 0)
+        if self.preemption != "off":
+            if cfg.sliding_window > 0:
+                raise ValueError(
+                    "preemption does not support sliding-window (ring) "
+                    "caches — a ring slot's blocks are positionally "
+                    "wrapped, not droppable; serve windowed configs with "
+                    "preemption='off'")
+            if eff_block == 0:
+                raise ValueError(
+                    f"preemption parks/drops paged KV blocks but family "
+                    f"'{cfg.family}' has no pageable cache leaves — serve "
+                    f"it with preemption='off'")
         if not self.chunked_prefill:
             return
         if cfg.sliding_window > 0:

@@ -121,7 +121,7 @@ import json
 import logging
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -141,6 +141,9 @@ from repro.serve.fused import (DONE_REASONS, _sample_tokens, argmax_tokens,
                                decode_epilogue, pick_first, sample_tokens,
                                sample_tokens_probs)
 from repro.serve.prefix_cache import PrefixCache, block_keys
+from repro.serve.qos import (DEFAULT_ADMIT_LOOKAHEAD, ParkedState,
+                             QoSConfig, TenantScheduler, predict_ttft,
+                             priority_of, tenant_of)
 from repro.serve.speculate import NGramProposer
 
 Array = jnp.ndarray
@@ -179,6 +182,9 @@ class Request:
     emitted: int = 0              # tokens already streamed out via step()
     spec_req_steps: int = 0       # this request's speculative verify steps
     spec_req_accepted: int = 0    # draft tokens those steps accepted
+    preemptions: int = 0          # times this request was parked/requeued
+    resuming: bool = False        # parked by recompute: the next admission
+    #                             # is a resume (re-prefill prompt + output)
 
     def __post_init__(self):
         if self.params is None:
@@ -219,11 +225,23 @@ class Request:
         self.t_tok.append(t)
         self.t_first = self.t_first or t
 
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """Token ids a (re-)prefill consumes. Normally the prompt; when a
+        recompute-preempted request resumes, the prompt plus all but the
+        last generated token — their KV was dropped at the park, and the
+        last token is the decode input (its KV is written by the next
+        decode step), exactly as after a fresh admission."""
+        if self.resuming and len(self.out) > 1:
+            return np.concatenate(
+                [self.tokens, np.asarray(self.out[:-1], np.int32)])
+        return self.tokens
+
     def batch(self, pad_to: int = 0) -> Dict[str, Array]:
         """Single-row prefill batch (tokens + modality extras). ``pad_to``
         right-pads the token row to that length (chunked prefill rounds the
         prompt up to a whole number of chunks; padded rows are masked)."""
-        toks = self.tokens
+        toks = self.prefill_tokens
         if pad_to > len(toks):
             toks = np.concatenate(
                 [toks, np.zeros(pad_to - len(toks), np.int32)])
@@ -357,8 +375,22 @@ class _SlotTable:
     def __init__(self, n_slots: int, cache_len: int, *, block_size: int = 0,
                  n_blocks: int = 0, window: int = 0, chunk: int = 0,
                  token_budget: int = 0, prefix_cache: bool = False,
-                 sanitize: bool = False, obs: Optional[EngineObs] = None):
+                 sanitize: bool = False, obs: Optional[EngineObs] = None,
+                 qos: Optional[QoSConfig] = None, preemption: str = "off"):
         self.n_slots, self.cache_len = n_slots, cache_len
+        # -- multi-tenant QoS (PR 10, repro.serve.qos) --------------------
+        # policy objects; None/"off" keeps the legacy FCFS behavior (plus
+        # the bounded admission skip-ahead, which is always on)
+        self.qos = qos
+        self.preemption = preemption
+        quantum = (qos.quantum if qos is not None and qos.quantum > 0
+                   else (chunk if chunk > 0 else 16))
+        self._drr_admit = TenantScheduler(qos, quantum)
+        self._drr_chunk = TenantScheduler(qos, quantum)
+        self._parked: Dict[int, ParkedState] = {}   # rid -> parked state
+        self._chunk_pick: Optional[int] = None      # this step's chunk slot
+        self._step_ewma = 0.0        # EWMA step() wall time (TTFT model)
+        self._tenant_stats: Dict[str, Dict[str, int]] = {}
         # telemetry bundle (PR 9): the always-on per-engine registry plus
         # the (default no-op) span recorder. stats() and the n_aborted /
         # n_stopped / n_spec_* back-compat attributes are views over it.
@@ -435,6 +467,11 @@ class _SlotTable:
         # sanitize / --sanitize): shadows every step with an ownership scan
         self.sanitizer: Optional[PoolSanitizer] = \
             PoolSanitizer(self) if sanitize and self.paged else None
+        if not self.paged:
+            # preemption parks/drops paged blocks; a family with no
+            # pageable leaves (effective_page_block == 0) degrades to the
+            # direct path and cannot be preempted
+            self.preemption = "off"
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -498,9 +535,62 @@ class _SlotTable:
         self._reject_unservable(req)
         self._next_rid = max(self._next_rid, req.rid + 1)
         req.t_submit = req.t_submit or time.perf_counter()
-        self.waiting.append(req)
         self.obs.submitted.inc()
+        if self.qos is not None:
+            why = self._admission_control(req)
+            if why is not None:
+                self._finish_rejected(req, why)
+                return req.rid
+        self.waiting.append(req)
         return req.rid
+
+    def _admission_control(self, req: Request) -> Optional[str]:
+        """SLO-aware load shedding at submission (``QoSConfig``): None →
+        accept into the queue; otherwise the reason to reject. The
+        predicted-TTFT model is first-order by design: every prompt token
+        queued or still prefilling ahead of the arrival must flow through
+        the per-step chunk budget at the observed (EWMA) step time."""
+        q = self.qos
+        if q.max_waiting and len(self.waiting) >= q.max_waiting:
+            return (f"queue depth {len(self.waiting)} at the "
+                    f"max_waiting={q.max_waiting} bound")
+        if q.max_predicted_ttft_s > 0 and self.chunked \
+                and self._step_ewma > 0:
+            backlog = sum(self._prefill_width(r) for r in self.waiting)
+            backlog += sum(
+                int(self.prefill_width[s] - self.prefill_pos[s])
+                for s in self.prefill_order)
+            eta = predict_ttft(backlog + self._prefill_width(req),
+                               self.chunk, self._step_ewma)
+            if eta > q.max_predicted_ttft_s:
+                return (f"predicted TTFT {eta:.3f}s over the "
+                        f"max_predicted_ttft_s={q.max_predicted_ttft_s} "
+                        f"SLO ({backlog} backlog tokens)")
+        return None
+
+    def _finish_rejected(self, req: Request, why: str) -> None:
+        """Admission control refused the submission: retire it without a
+        slot (``finish_reason="rejected"``, zero tokens) — the terminal
+        ``RequestOutput`` streams from the next ``step()``, exactly like
+        an admission retirement. Rejection is load shedding, not an
+        error, so it logs rather than raises."""
+        logger.info("reject request %d (tenant %s): %s", req.rid,
+                    tenant_of(req), why)
+        req.t_done = time.perf_counter()
+        self._set_reason(req, "rejected")
+        tenant = tenant_of(req)
+        self._tenant(tenant)["rejections"] += 1
+        self.obs.rejected(tenant).inc()
+        self._obs_retired(None, req)
+        self.admit_retired.append(req)
+
+    def _tenant(self, tenant: str) -> Dict[str, int]:
+        st = self._tenant_stats.get(tenant)
+        if st is None:
+            st = {"tokens": 0, "preemptions": 0, "resumes": 0,
+                  "rejections": 0}
+            self._tenant_stats[tenant] = st
+        return st
 
     def _reject_unservable(self, req: Request) -> None:
         """Fail fast at submission on requests that can never be admitted,
@@ -532,6 +622,8 @@ class _SlotTable:
         every request that progressed — finished ones first (admission
         retirements, then this step's), then the live per-token deltas in
         slot order."""
+        t_start = time.perf_counter()
+        self._chunk_pick = None      # this step's chunk pick, not yet made
         self._admit_waiting()
         finished = self._drain_admit_retired()
         if self.active:
@@ -545,6 +637,10 @@ class _SlotTable:
             if req is not None and req.emitted < len(req.out):
                 outs.append(self._output(req))
         self._obs_step()
+        # EWMA step time feeds the admission-control TTFT prediction
+        dt = time.perf_counter() - t_start
+        self._step_ewma = dt if self._step_ewma == 0.0 \
+            else 0.9 * self._step_ewma + 0.1 * dt
         return outs
 
     def abort(self, rid: int) -> Optional[RequestOutput]:
@@ -557,6 +653,13 @@ class _SlotTable:
         for i, req in enumerate(self.waiting):
             if req.rid == rid:
                 self.waiting.pop(i)
+                parked = self._parked.pop(rid, None)
+                if parked is not None:
+                    # a parked victim holds pinned prefix refs (and, swap,
+                    # a host payload): release them exactly
+                    self._drop_parked(parked)
+                    if self.sanitizer is not None:
+                        self.sanitizer.check_pool()
                 return self._finish_aborted(req)
         for slot, req in enumerate(self.slot_req):
             if req is None or req.rid != rid:
@@ -586,6 +689,7 @@ class _SlotTable:
         req.t_done = time.perf_counter()
         obs = self.obs
         obs.aborted.inc()
+        self._account_retired(req)
         tr = obs.trace
         if tr.enabled:
             slot = getattr(req, "_obs_slot", None)
@@ -601,21 +705,337 @@ class _SlotTable:
         return self._output(req)
 
     def _admit_waiting(self) -> None:
-        """FCFS admission from the waiting queue: stop at the first request
-        that can't be admitted (no free slot, or the pool can't reserve its
-        blocks yet — it retries next step). A request no idle server can
+        """Admission from the waiting queue. Without a QoSConfig this is
+        FCFS with a bounded skip-ahead window (``DEFAULT_ADMIT_LOOKAHEAD``)
+        past an unadmittable queue head — a pool-starved large prompt no
+        longer head-of-line-blocks smaller admissible requests behind it.
+        With a QoSConfig, deficit round robin arbitrates *between tenants*
+        (weighted, charged in prompt tokens) while FCFS order is preserved
+        *within* each tenant. Either way a request no idle server can
         admit would wait forever: raise instead."""
-        while self.waiting and self.free_slots():
-            req = self.waiting[0]
-            t0 = time.perf_counter()
-            if not self.admit(req):
-                break                # wait for blocks to free up
-            self.waiting.pop(0)
-            self._on_admitted(req, t0)
+        if self.qos is None:
+            self._admit_fcfs()
+        else:
+            self._admit_drr()
         if self.waiting and not self.active:
+            req = self.waiting[0]
+            # last resort on an otherwise idle server: parked requests'
+            # pinned prefix blocks may be what is starving the pool —
+            # release the pins (their contents stay reproducible: swap
+            # payloads move host-side first, recompute re-prefills) and
+            # retry the head once before declaring the pool too small
+            if self._parked and self._unpin_parked():
+                t0 = time.perf_counter()
+                if self._try_admit(req):
+                    self._dequeue(req)
+                    self._on_admitted(req, t0)
+                    return
             raise RuntimeError(
-                f"cannot admit request {self.waiting[0].rid} even on an "
+                f"cannot admit request {req.rid} even on an "
                 f"idle server — the KV block pool is too small for it")
+
+    def _dequeue(self, req: Request) -> None:
+        # identity scan: the Request dataclass __eq__ compares ndarray
+        # fields, so list.remove would die on ambiguous truth values
+        i = next(i for i, r in enumerate(self.waiting) if r is req)
+        self.waiting.pop(i)
+
+    def _admit_fcfs(self) -> None:
+        while self.waiting and self.free_slots():
+            admitted = False
+            for i in range(min(len(self.waiting),
+                               DEFAULT_ADMIT_LOOKAHEAD)):
+                req = self.waiting[i]
+                t0 = time.perf_counter()
+                if self._try_admit(req):
+                    self._dequeue(req)
+                    self._on_admitted(req, t0)
+                    admitted = True
+                    break            # restart the scan from the head
+            if not admitted:
+                break                # wait for blocks to free up
+
+    def _admit_drr(self) -> None:
+        """DRR admission: each round offers every tenant's HEAD waiting
+        request (within-tenant FCFS) to the tenant scheduler at a cost of
+        its prefill width; a tenant whose head can't be admitted right
+        now is refunded and stood aside for this step, so one starved
+        tenant never blocks the others' admissions."""
+        blocked: set = set()
+        while self.waiting and self.free_slots():
+            heads: Dict[str, Request] = {}
+            for r in self.waiting:
+                t = tenant_of(r)
+                if t not in heads and t not in blocked:
+                    heads[t] = r
+            if not heads:
+                break
+            cand = {t: self._prefill_width(r) for t, r in heads.items()}
+            pick = self._drr_admit.pick(cand)
+            req = heads[pick]
+            t0 = time.perf_counter()
+            if not self._try_admit(req):
+                self._drr_admit.refund(pick, cand[pick])
+                blocked.add(pick)
+                continue
+            self._dequeue(req)
+            self._on_admitted(req, t0)
+
+    # ------------------------------------------------------------------
+    # Preemption: park / resume over the paged pool (repro.serve.qos)
+    # ------------------------------------------------------------------
+
+    def _try_admit(self, req: Request) -> bool:
+        """One admission attempt with the QoS extensions: a swap-parked
+        request resumes by swap-in (no prefill at all); anything else —
+        including recompute-parked requests, which re-enter chunked
+        prefill over prompt + generated tokens — goes through the
+        subclass ``admit``. On pool-pressure failure, preemption (when
+        enabled) evicts one strictly-lower-priority victim and retries
+        until the request fits or no eligible victim remains."""
+        parked = self._parked.get(req.rid)
+        while True:
+            if parked is not None and parked.mode == "swap":
+                ok = self._admit_swapped(parked)
+            else:
+                ok = self.admit(req)
+            if ok:
+                if parked is not None and parked.mode == "recompute":
+                    # the resume's prefix match re-acquired whatever it
+                    # still shares; the park's pin is now redundant
+                    self._parked.pop(req.rid, None)
+                    if self.prefix is not None:
+                        for b in parked.pinned:
+                            self.prefix.release(b)
+                    parked.pinned = ()
+                return True
+            if self.preemption == "off":
+                return False
+            victim = self._pick_victim(priority_of(req))
+            if victim is None:
+                return False
+            self._preempt(victim)
+
+    def _pick_victim(self, floor: int,
+                     exclude: Tuple[Optional[int], ...] = ()
+                     ) -> Optional[int]:
+        """Slot of the best preemption victim with priority strictly
+        below ``floor`` — lowest priority first, youngest admission first
+        among equals (it has the least work to lose). Mid-prefill slots
+        are eligible (they requeue cheaply); in recompute mode a decoding
+        victim whose resume prefill could never fit the pool again is
+        skipped (preempting it would strand it unadmittable forever)."""
+        best, best_key = None, None
+        usable = self.allocator.n_blocks - 1 if self.paged else 0
+        for slot in self.active:
+            if slot in exclude:
+                continue
+            req = self.slot_req[slot]
+            p = priority_of(req)
+            if p >= floor:
+                continue
+            if self.preemption == "recompute" and not self.prefilling[slot]:
+                need = -(-int(self.pos[slot]) // self.block_size)
+                if min(need, self.nb_slot) > usable:
+                    continue
+            key = (p, -req.t_admit)
+            if best_key is None or key < best_key:
+                best, best_key = slot, key
+        return best
+
+    def _can_park(self, slot: int) -> bool:
+        """A decoding slot may be parked only if its resume could ever be
+        admitted again: always true for swap (the payload re-enters any
+        free blocks), but a recompute resume must re-prefill its whole
+        position span through the pool."""
+        if self.preemption != "recompute" or self.prefilling[slot]:
+            return True
+        need = -(-int(self.pos[slot]) // self.block_size)
+        return min(need, self.nb_slot) <= self.allocator.n_blocks - 1
+
+    def _preempt(self, slot: int) -> None:
+        """Evict the request holding ``slot`` to relieve pool pressure.
+        Mid-prefill victims simply requeue (their chunk state is cheap to
+        rebuild); decoding victims park — ``swap`` carries their private
+        block contents to the host, ``recompute`` drops them and replays
+        the generated tokens through chunked prefill at resume. Either
+        way the victim re-enters the waiting queue at the front, and its
+        resumed output is token-for-token identical: sampling is seeded
+        per token index, independent of the schedule."""
+        req = self.slot_req[slot]
+        mode = self.preemption
+        if self.prefilling[slot]:
+            mode = "requeue"
+            self.prefill_order.remove(slot)
+            self.prefilling[slot] = False
+            self.prefill_x[slot] = None
+            self.prefill_carry[slot] = None
+            self.prefill_keys[slot] = None
+            self.prefill_pos[slot] = 0
+            self.prefill_base[slot] = 0
+            self.prefill_width[slot] = 0
+            self._release(slot)
+        elif mode == "swap":
+            self._park_swap(slot, req)
+        else:
+            self._park_recompute(slot, req)
+        self._obs_preempted(slot, req, mode)
+        req.preemptions += 1
+        tenant = tenant_of(req)
+        self._tenant(tenant)["preemptions"] += 1
+        self.obs.preempted(tenant, mode).inc()
+        self.waiting.insert(0, req)
+        logger.info("preempt request %d (tenant %s, priority %d, mode %s)",
+                    req.rid, tenant, priority_of(req), mode)
+
+    def _park_recompute(self, slot: int, req: Request) -> None:
+        """Drop the victim's blocks, keeping only pinned prefix-cache
+        references; the resume replays ``prompt + out[:-1]`` through
+        chunked prefill (largely hitting the cache when the pins held)."""
+        n = int(self.n_alloc[slot])
+        refs = self.prefix.refcounts if self.prefix is not None else {}
+        pinned = tuple(
+            b for b in (int(x) for x in self.block_tables[slot, :n])
+            if b in refs)
+        if pinned:
+            self.prefix.acquire(list(pinned))    # pin across the park
+        req.resuming = True
+        self._parked[req.rid] = ParkedState(
+            req=req, mode="recompute", pinned=pinned,
+            pos=int(self.pos[slot]), last_tok=int(self.last_tok[slot]))
+        self._release(slot)
+
+    def _park_swap(self, slot: int, req: Request) -> None:
+        """Copy the victim's private block rows (and its direct, non-
+        paged cache leaves) to the host, then free them; cache-tracked
+        rows stay resident in the pool under a pin. Resume scatters the
+        payload into freshly allocated blocks — no recompute at all."""
+        n = int(self.n_alloc[slot])
+        blocks = [int(b) for b in self.block_tables[slot, :n]]
+        refs = self.prefix.refcounts if self.prefix is not None else {}
+        shared = tuple((i, b) for i, b in enumerate(blocks) if b in refs)
+        private = tuple((i, b) for i, b in enumerate(blocks)
+                        if b not in refs)
+        payload = jax.device_get(self.spec.swap_out(
+            self.cache, slot, [b for _, b in private]))
+        pinned = tuple(b for _, b in shared)
+        if pinned:
+            self.prefix.acquire(list(pinned))    # pin across the park
+        self._parked[req.rid] = ParkedState(
+            req=req, mode="swap", pinned=pinned, shared=shared,
+            private=private, payload=payload, pos=int(self.pos[slot]),
+            last_tok=int(self.last_tok[slot]), n_alloc=n,
+            extras=self._park_extras(slot))
+        self._release(slot)
+
+    def _admit_swapped(self, st: ParkedState) -> bool:
+        """Resume a swap-parked request: allocate fresh physical blocks
+        for its private rows, rebuild its block table (pinned shared rows
+        map back in place — the parked pin transfers silently to the
+        slot's table reference), scatter the host payload back, and
+        re-occupy a slot with NO prefill: the decode cursor restarts
+        exactly where the park left it."""
+        free = self.free_slots()
+        if not free:
+            return False
+        req = st.req
+        slot = free[0]
+        fresh: List[int] = []
+        if st.private:
+            got = self._alloc_blocks(len(st.private))
+            if got is None:
+                return False
+            fresh = got
+        for i, b in st.shared:
+            self.block_tables[slot, i] = b
+        for (i, _), b in zip(st.private, fresh):
+            self.block_tables[slot, i] = b
+        self.n_alloc[slot] = st.n_alloc
+        self._stamp_gens(slot, 0, st.n_alloc)
+        self._tables_dirty = True
+        self.cache = self.spec.swap_in(self.cache, st.payload, slot,
+                                       fresh)
+        self.slot_req[slot] = req
+        self.pos[slot] = st.pos
+        self.last_tok[slot] = st.last_tok
+        self._restore_extras(slot, st.extras)
+        self._dstate = None
+        self._parked.pop(req.rid, None)
+        return True
+
+    def _drop_parked(self, st: ParkedState) -> None:
+        """Free a parked request's held resources exactly: the pinned
+        prefix references go back to the cache's LRU accounting and the
+        swap payload is dropped (host memory only — its private blocks
+        returned to the pool at park time)."""
+        if self.prefix is not None:
+            for b in st.pinned:
+                self.prefix.release(b)
+        st.pinned = ()
+        st.payload = None
+
+    def _unpin_parked(self) -> bool:
+        """Deadlock relief on an otherwise idle server: drop every parked
+        request's pinned prefix references so the LRU can evict those
+        blocks for the admission that is starving. Recompute parks lose
+        nothing (resume re-prefills whatever was evicted); swap parks
+        first fold the pinned rows' contents into their host payload and
+        thereafter resume fully from host copies. True if any pin was
+        released."""
+        released = False
+        for st in self._parked.values():
+            if not st.pinned:
+                continue
+            if st.mode == "swap" and st.shared:
+                extra = jax.device_get(self.spec.swap_out(
+                    self.cache, 0, [b for _, b in st.shared]))
+                st.payload = self._merge_payload(st.payload, extra)
+                st.private = st.private + st.shared
+                st.shared = ()
+            for b in st.pinned:
+                self.prefix.release(b)
+            st.pinned = ()
+            released = True
+        return released
+
+    def _merge_payload(self, a, b):
+        """Append payload ``b``'s pool rows after ``a``'s. Direct leaves
+        keep ``a``'s slot copy — ``b`` was gathered with a dummy slot and
+        only its pool rows are meaningful."""
+        def one(x, y, b_ax, s_ax):
+            if s_ax < 0:
+                return x
+            return np.concatenate([np.asarray(x), np.asarray(y)],
+                                  axis=b_ax)
+        return jax.tree.map(one, a, b, self.spec.batch_axes,
+                            self.spec.paged.seq_axes)
+
+    def _park_extras(self, slot: int) -> Dict[str, Any]:
+        """Subclass hook: extra per-slot host state a swap park must
+        carry (the mixture server parks its router-weight row)."""
+        return {}
+
+    def _restore_extras(self, slot: int, extras: Dict[str, Any]) -> None:
+        """Subclass hook: restore ``_park_extras`` state at swap resume."""
+        return None
+
+    def _obs_preempted(self, slot: int, req: Request, mode: str) -> None:
+        """Close the victim's open phase span and mark the preemption as
+        an instant on its slot track; the queued span re-opens from this
+        stamp at resume (``_on_admitted``)."""
+        t = time.perf_counter()
+        req._obs_queued_from = t
+        tr = self.obs.trace
+        if tr.enabled:
+            tid = self.obs.slot_tid(slot)
+            t0 = getattr(req, "_obs_t_phase", 0.0)
+            if t0:
+                tr.complete(getattr(req, "_obs_phase", "decode"), t0, t,
+                            tid, args={"rid": req.rid})
+            tr.instant("preempt", t, tid,
+                       args={"rid": req.rid, "mode": mode,
+                             "tenant": tenant_of(req)})
+        req._obs_t_phase = 0.0
 
     def _on_admitted(self, req: Request, t0: float) -> None:
         """Telemetry boundary for one successful admission: stamp
@@ -626,10 +1046,13 @@ class _SlotTable:
         always sum to its end-to-end latency."""
         t1 = req.t_done if req.finish_reason is not None \
             else time.perf_counter()
-        req.t_admit = t0
+        resumed_from = getattr(req, "_obs_queued_from", 0.0)
+        if not req.t_admit:          # resumes keep their first admission
+            req.t_admit = t0
         obs = self.obs
         obs.admitted.inc()
-        obs.queued_s.observe(t0 - req.t_submit)
+        # a resumed request's queue delay is measured from its preemption
+        obs.queued_s.observe(t0 - (resumed_from or req.t_submit))
         slot = next((s for s, r in enumerate(self.slot_req) if r is req),
                     None)
         if req.finish_reason is None and slot is not None:
@@ -641,11 +1064,19 @@ class _SlotTable:
             req._obs_t_phase = t1
         tr = obs.trace
         if tr.enabled:
-            tr.async_begin("queued", req.t_submit, req.rid,
+            tr.async_begin("queued", resumed_from or req.t_submit, req.rid,
                            args={"rid": req.rid})
             tr.async_end("queued", t0, req.rid)
             tid = obs.slot_tid(slot) if slot is not None else ADMIT_TID
             tr.complete("admission", t0, t1, tid, args={"rid": req.rid})
+        if resumed_from:
+            tenant = tenant_of(req)
+            self._tenant(tenant)["resumes"] += 1
+            obs.resumed(tenant).inc()
+            if tr.enabled and slot is not None:
+                tr.instant("resume", t0, obs.slot_tid(slot),
+                           args={"rid": req.rid, "tenant": tenant})
+            req._obs_queued_from = 0.0
 
     def _obs_step(self) -> None:
         """Per-step telemetry epilogue: bump the step counter and refresh
@@ -682,8 +1113,9 @@ class _SlotTable:
     def _prefill_width(self, req: Request) -> int:
         """Decoder positions a request's prefill consumes (so admission can
         reserve blocks before paying for the prefill). Subclasses set
-        ``self.model`` before admitting."""
-        w = len(req.tokens)
+        ``self.model`` before admitting. A resuming (recompute-preempted)
+        request re-prefills its generated tokens too."""
+        w = len(req.prefill_tokens)
         if self.model.cfg.family == "vlm":
             w += self.model.cfg.n_patches          # image prefix
         return w
@@ -810,7 +1242,42 @@ class _SlotTable:
         if not np.any((need > self.n_alloc) & (self.n_alloc > 0)):
             return
         for slot in self.decoding:
-            if not self._reserve(slot, int(self.pos[slot]) + 1):
+            if self.slot_req[slot] is None:
+                continue             # preempted as a victim in this loop
+            while not self._reserve(slot, int(self.pos[slot]) + 1):
+                if self.preemption != "off":
+                    # preempt a strictly-lower-priority victim to keep
+                    # this slot decoding; never the growing slot itself,
+                    # nor this step's already-scheduled chunk slot
+                    p = priority_of(self.slot_req[slot])
+                    victim = self._pick_victim(
+                        p, exclude=(slot, self._chunk_pick))
+                    if victim is None:
+                        # last resort: an equal-priority victim (youngest
+                        # first, never a higher one). The grower's reserve
+                        # succeeds right after the park, so every eviction
+                        # funds immediate decode progress — two requests
+                        # too big for the pool together hand it back and
+                        # forth but can never livelock
+                        victim = self._pick_victim(
+                            p + 1, exclude=(slot, self._chunk_pick))
+                    if victim is not None:
+                        self._preempt(victim)
+                        continue
+                    # every other active slot outranks the grower: park
+                    # the growing request itself rather than crash (the
+                    # higher-priority slots keep progressing and free
+                    # blocks for its resume). A slot that cannot grow
+                    # even alone is a genuinely too-small pool and still
+                    # raises below.
+                    if len(self.active) > 1 and self._can_park(slot):
+                        self._preempt(slot)
+                        break
+                    # parked requests' pinned prefix blocks may be what
+                    # is starving the pool: release the pins (contents
+                    # stay reproducible) and retry the reservation
+                    if self._parked and self._unpin_parked():
+                        continue
                 req = self.slot_req[slot]
                 raise RuntimeError(
                     f"KV block pool exhausted growing slot {slot} (request "
@@ -900,6 +1367,15 @@ class _SlotTable:
         req.finish_reason = reason
         req.truncated = reason == "truncated"
         self.obs.retired(reason).inc()
+        self._account_retired(req)
+
+    def _account_retired(self, req: Request) -> None:
+        """Fold a terminal request into its tenant's token accounting
+        (the per-tenant breakdown ``stats()`` reports and the
+        ``serve_tenant_tokens_total`` series)."""
+        tenant = tenant_of(req)
+        self._tenant(tenant)["tokens"] += len(req.out)
+        self.obs.tenant_tokens(tenant).inc(len(req.out))
 
     def _obs_retired(self, slot: Optional[int], req: Request) -> None:
         """Telemetry boundary for one retirement (``t_done`` already
@@ -935,6 +1411,19 @@ class _SlotTable:
 
     def _occupy(self, slot: int, req: Request, first_tok: int,
                 prompt_len: int) -> None:
+        if req.resuming:
+            # resumed recompute prefill: the "first token" pick merely
+            # re-predicted the last already-recorded token (and a sampled
+            # pick used a fresh count-0 fold, so it need not even match) —
+            # discard it and put the decode cursor exactly back where the
+            # park left it: pos = resume width = park-time pos, last_tok =
+            # the last recorded token
+            req.resuming = False
+            self.slot_req[slot] = req
+            self.pos[slot] = prompt_len
+            self.last_tok[slot] = int(req.out[-1])
+            self._dstate = None
+            return
         req.record(first_tok)
         self.slot_req[slot] = req
         self.pos[slot] = prompt_len
@@ -1106,6 +1595,7 @@ class _SlotTable:
                 self.obs.step_timing("chunk", t0, t1)
                 return retired
             self._grow_active()
+            dec = self.decoding      # growth may have preempted a victim
             st = self._device_state()
             t0 = time.perf_counter()
             nxt, done, first = self._run_fused_chunk(st, slot, xc, start,
@@ -1123,6 +1613,7 @@ class _SlotTable:
                 return retired
             # pool can't cover the span this step: vanilla single token
         self._grow_active()
+        dec = self.decoding          # growth may have preempted a victim
         st = self._device_state()
         t0 = time.perf_counter()
         nxt, done = self._run_fused(st)
@@ -1325,7 +1816,34 @@ class _SlotTable:
             out.update(self.prefix.stats())
         if self.sanitizer is not None:
             out.update(self.sanitizer.stats())
+        if self.qos is not None or self.preemption != "off":
+            out["parked"] = len(self._parked)
+            out["tenants"] = self._tenant_breakdown()
         return out
+
+    def _tenant_breakdown(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant view: cumulative counters (tokens at retirement,
+        preemptions, resumes, rejections) plus the live picture — active
+        slots, pool blocks held by those slots, blocks pinned by parked
+        requests, and tokens emitted by still-running requests."""
+        def zero() -> Dict[str, int]:
+            return {"tokens": 0, "preemptions": 0, "resumes": 0,
+                    "rejections": 0, "active_slots": 0, "pool_blocks": 0,
+                    "parked": 0, "pinned_blocks": 0, "tokens_live": 0}
+        tenants: Dict[str, Dict[str, int]] = {}
+        for t, st in self._tenant_stats.items():
+            tenants[t] = dict(zero(), **st)
+        for slot in self.active:
+            req = self.slot_req[slot]
+            d = tenants.setdefault(tenant_of(req), zero())
+            d["active_slots"] += 1
+            d["pool_blocks"] += int(self.n_alloc[slot])
+            d["tokens_live"] += len(req.out)
+        for st in self._parked.values():
+            d = tenants.setdefault(tenant_of(st.req), zero())
+            d["parked"] += 1
+            d["pinned_blocks"] += len(st.pinned)
+        return tenants
 
     @property
     def metrics(self) -> _obs_metrics.MetricsRegistry:
@@ -1385,16 +1903,20 @@ class _SlotTable:
         request stays pending (the match re-runs on retry, so a prefix
         evicted meanwhile is simply re-prefilled)."""
         self._reject_overlong(req, width)
+        toks = req.prefill_tokens    # resume: prompt + generated tokens
         base, shared, keys = 0, [], None
         if self.prefix is not None:
             # memoized per request: a pool-blocked admission retries every
-            # step, and the keys (incl. the extras digest) are immutable
+            # step, and the keys (incl. the extras digest) are immutable —
+            # but a resume's token span differs from the original prompt,
+            # so the memo is keyed by span length too
             cached = getattr(req, "_prefix_keys", None)
-            if cached is None or cached[0] != self.block_size:
-                keys = block_keys(req.tokens, req.extras, self.block_size,
+            memo_key = (self.block_size, len(toks))
+            if cached is None or cached[0] != memo_key:
+                keys = block_keys(toks, req.extras, self.block_size,
                                   width // self.block_size,
-                                  n_prefix=width - len(req.tokens))
-                req._prefix_keys = (self.block_size, keys)
+                                  n_prefix=width - len(toks))
+                req._prefix_keys = (memo_key, keys)
             else:
                 keys = cached[1]
             tr = self.obs.trace
@@ -1411,7 +1933,7 @@ class _SlotTable:
         if self.prefix is not None:
             self.prefix.record(width, base)
         pad = -(width - base) % self.chunk
-        b = req.batch(pad_to=len(req.tokens) + pad)
+        b = req.batch(pad_to=len(toks) + pad)
         x, carry = prep(b)
         if base:
             x = jax.lax.slice_in_dim(x, base, x.shape[self._seq_axis],
@@ -1481,12 +2003,36 @@ class _SlotTable:
         n_dec = len(self.decoding)
         return n_dec == 0 or n_dec + self.chunk <= self.token_budget
 
+    def _pick_chunk_slot(self) -> int:
+        """This step's prefill-chunk slot. FCFS (``prefill_order`` head)
+        without QoS; with a QoSConfig, deficit round robin across the
+        tenants that have a mid-prefill slot (one chunk = one charge),
+        FCFS within a tenant. Cached per step so the sanitizer's shadow
+        replay and the dispatch see the same pick without double-charging
+        the DRR."""
+        pick = self._chunk_pick
+        if pick is not None and self.prefilling[pick]:
+            return pick
+        pick = self.prefill_order[0]
+        if self.qos is not None and len(self.prefill_order) > 1:
+            heads: Dict[str, int] = {}
+            for s in self.prefill_order:
+                t = tenant_of(self.slot_req[s])
+                if t not in heads:
+                    heads[t] = s
+            if len(heads) > 1:
+                chosen = self._drr_chunk.pick(
+                    {t: self.chunk for t in heads})
+                pick = heads[chosen]
+        self._chunk_pick = pick
+        return pick
+
     def _chunk_args(self):
-        """(slot, x_chunk, start, length, block_table) for the FCFS-first
-        mid-prefill slot. The prompt was pre-split into chunk tensors at
-        admission, so picking this step's chunk costs no dispatch;
-        ``length`` masks the final chunk's padding."""
-        slot = self.prefill_order[0]
+        """(slot, x_chunk, start, length, block_table) for this step's
+        mid-prefill slot (``_pick_chunk_slot``). The prompt was pre-split
+        into chunk tensors at admission, so picking this step's chunk
+        costs no dispatch; ``length`` masks the final chunk's padding."""
+        slot = self._pick_chunk_slot()
         start = int(self.prefill_pos[slot])
         length = min(self.chunk, int(self.prefill_width[slot]) - start)
         xc = self.prefill_x[slot][
@@ -1780,6 +2326,7 @@ class SlotServer(_SlotTable):
                          prefix_cache=config.prefix_cache
                          and model.prefix_cacheable,
                          sanitize=config.sanitize,
+                         qos=config.qos, preemption=config.preemption,
                          obs=EngineObs(pod=pod, trace=config.trace,
                                        trace_ring=config.trace_ring,
                                        publish=config.metrics))
@@ -1946,6 +2493,7 @@ class MixtureSlotServer(_SlotTable):
                          prefix_cache=config.prefix_cache
                          and model.prefix_cacheable,
                          sanitize=config.sanitize,
+                         qos=config.qos, preemption=config.preemption,
                          obs=EngineObs(pod=pod, trace=config.trace,
                                        trace_ring=config.trace_ring,
                                        publish=config.metrics))
@@ -2046,6 +2594,15 @@ class MixtureSlotServer(_SlotTable):
     def _state_extras(self, st):
         st["weights"] = jnp.asarray(self.weights)
         return st
+
+    def _park_extras(self, slot: int) -> Dict[str, Any]:
+        # the router-weight row is per-slot host state a swap resume
+        # cannot rebuild (recompute resumes re-route on the features)
+        return {"weights": self.weights[slot].copy()}
+
+    def _restore_extras(self, slot: int, extras: Dict[str, Any]) -> None:
+        if "weights" in extras:
+            self.weights[slot] = extras["weights"]
 
     def _run_fused(self, st):
         self.cache, self._dstate, nxt, done = self._fstep(

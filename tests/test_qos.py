@@ -1,0 +1,433 @@
+"""Multi-tenant QoS: fairness, preemption, admission control.
+
+* DRR tenant arbitration: weighted shares, refunds, idle-tenant pruning.
+* Head-of-line fix: a pool-starved large prompt at the queue head no
+  longer blocks smaller admissible requests behind it.
+* Preempt/resume parity: with preemption forced on (tiny pool + mixed
+  priorities) every request's output — greedy AND seeded — must match
+  the run with preemption off and no pool pressure, token for token,
+  across paged / chunked / prefix-cache / speculative configs and on
+  the mixture + decentralized servers.
+* Resource exactness: aborting a parked request frees its swap payload
+  and pinned prefix references exactly; the PoolSanitizer stays clean
+  across preempt/resume churn.
+* SLO admission control: queue-depth and predicted-TTFT rejections
+  retire with ``finish_reason == "rejected"`` and zero tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.router import CentroidRouter, RouterConfig
+from repro.models import build_model
+from repro.serve.api import EngineConfig, QoSConfig, SamplingParams
+from repro.serve.qos import TenantScheduler, predict_ttft
+from repro.serve.scheduler import (DecentralizedSlotServer,
+                                   MixtureSlotServer, Request, SlotServer)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("qwen3_8b").reduced(vocab=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def mixed_queue(cfg, *, lens, budgets, priorities, tenants=None,
+                temperatures=None, seed=3):
+    """Requests with mixed priorities/tenants; even ids greedy, odd ids
+    seeded sampling unless ``temperatures`` overrides — one queue covers
+    both parity regimes."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, (n, m, p) in enumerate(zip(lens, budgets, priorities)):
+        temp = temperatures[i] if temperatures is not None \
+            else (0.0 if i % 2 == 0 else 0.8)
+        sp = SamplingParams(
+            max_new=m, temperature=temp, seed=100 + i, priority=p,
+            tenant=tenants[i] if tenants is not None else "default")
+        reqs.append(Request(i, rng.integers(0, cfg.vocab, size=n)
+                            .astype(np.int32), m, params=sp))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Policy objects (no engine)
+# ---------------------------------------------------------------------------
+
+def test_qos_config_validation():
+    with pytest.raises(ValueError, match="weights must be > 0"):
+        QoSConfig(tenant_weights=(("a", 0.0),))
+    with pytest.raises(ValueError, match="quantum"):
+        QoSConfig(quantum=-1)
+    with pytest.raises(ValueError, match="admit_lookahead"):
+        QoSConfig(admit_lookahead=0)
+    assert QoSConfig(tenant_weights=(("a", 2.0),)).weight("a") == 2.0
+    assert QoSConfig().weight("anyone") == 1.0
+
+
+def test_engine_config_preemption_dependencies():
+    with pytest.raises(ValueError, match="paging"):
+        EngineConfig(preemption="swap").validate()
+    with pytest.raises(ValueError, match="chunked"):
+        EngineConfig(paged=True, preemption="recompute").validate()
+    with pytest.raises(ValueError, match="chunked_prefill"):
+        EngineConfig(qos=QoSConfig(max_predicted_ttft_s=1.0)).validate()
+    # max_waiting alone needs neither paging nor chunking
+    EngineConfig(qos=QoSConfig(max_waiting=4)).validate()
+
+
+def test_drr_weighted_fairness():
+    ts = TenantScheduler(QoSConfig(tenant_weights=(("a", 2.0), ("b", 1.0))),
+                         quantum=8)
+    counts = {"a": 0, "b": 0}
+    for _ in range(30):
+        counts[ts.pick({"a": 8, "b": 8})] += 1
+    # equal costs, 2:1 weights -> a is served twice as often
+    assert counts["a"] + counts["b"] == 30
+    assert 1.5 <= counts["a"] / counts["b"] <= 2.5, counts
+
+
+def test_drr_within_cost_proportionality():
+    # with equal weights but unequal costs, token share (picks x cost)
+    # equalizes: the cheap tenant is picked ~4x as often
+    ts = TenantScheduler(QoSConfig(), quantum=4)
+    served = {"cheap": 0, "dear": 0}
+    for _ in range(50):
+        t = ts.pick({"cheap": 4, "dear": 16})
+        served[t] += {"cheap": 4, "dear": 16}[t]
+    ratio = served["cheap"] / served["dear"]
+    assert 0.5 <= ratio <= 2.0, served
+
+
+def test_drr_refund_and_idle_pruning():
+    ts = TenantScheduler(QoSConfig(), quantum=10)
+    t = ts.pick({"a": 10, "b": 10})
+    d0 = ts._deficit[t]
+    ts.refund(t, 10)
+    assert ts._deficit[t] == d0 + 10
+    # an idle tenant drops out of the rotation and loses its deficit
+    assert ts.pick({"b": 10}) == "b"
+    assert "a" not in ts._deficit
+
+
+def test_predict_ttft_monotone():
+    assert predict_ttft(0, 16, 0.01) == pytest.approx(0.01)
+    assert predict_ttft(160, 16, 0.01) == pytest.approx(0.11)
+    assert predict_ttft(320, 16, 0.01) > predict_ttft(160, 16, 0.01)
+    assert predict_ttft(100, 16, 0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Head-of-line fix (no QoSConfig: the default bounded skip-ahead)
+# ---------------------------------------------------------------------------
+
+def test_admission_skip_ahead_past_starved_head(small_model):
+    cfg, model, params = small_model
+    server = SlotServer(model, params, config=EngineConfig(
+        n_slots=2, cache_len=32, paged=True, page_block=4, pool_blocks=6))
+    rng = np.random.default_rng(0)
+
+    def prompt(n):
+        return rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+
+    r0 = server.add_request(prompt(8), SamplingParams(max_new=4))
+    server.step()                       # r0 decoding, holds 2 of 5 blocks
+    big = server.add_request(prompt(16), SamplingParams(max_new=2))
+    small = server.add_request(prompt(4), SamplingParams(max_new=6))
+    server.step()
+    in_slots = {r.rid for r in server.slot_req if r is not None}
+    # the 4-block head request cannot fit (3 free) — the 1-block request
+    # behind it must NOT be blocked by it
+    assert small in in_slots and big not in in_slots
+    assert [r.rid for r in server.waiting] == [big]
+    # ...and the starved head still completes once blocks free up
+    outs = {}
+    for _ in range(200):
+        for o in server.step():
+            if o.finished:
+                outs[o.rid] = o
+        if not server.has_unfinished():
+            break
+    assert set(outs) == {r0, big, small}
+    assert all(o.finish_reason == "length" for o in outs.values())
+
+
+# ---------------------------------------------------------------------------
+# Preempt/resume parity (the core invariant)
+# ---------------------------------------------------------------------------
+
+PARITY_CONFIGS = [
+    ("swap_paged", dict(paged=True, page_block=4)),
+    ("recompute_chunked", dict(paged=True, page_block=4,
+                               chunked_prefill=True, chunk=8)),
+    ("recompute_prefix", dict(paged=True, page_block=4,
+                              chunked_prefill=True, chunk=8,
+                              prefix_cache=True)),
+    ("swap_speculative", dict(paged=True, page_block=4,
+                              chunked_prefill=True, chunk=8,
+                              speculative="ngram", spec_len=3)),
+]
+
+
+def parity_queue(cfg):
+    # two low-priority requests fill both slots; the high-priority
+    # arrival must preempt to get in (pool_blocks=7 -> 6 usable; each
+    # low request peaks at ceil(14/4)=4 blocks)
+    return mixed_queue(cfg, lens=(8, 8, 8), budgets=(6, 6, 4),
+                       priorities=(0, 0, 2))
+
+
+@pytest.mark.parametrize("name,knobs",
+                         PARITY_CONFIGS, ids=[c[0] for c in PARITY_CONFIGS])
+def test_preempt_resume_parity_slot_server(small_model, name, knobs):
+    cfg, model, params = small_model
+    mode = "swap" if name.startswith("swap") else "recompute"
+
+    base = EngineConfig(n_slots=2, cache_len=32, **knobs)
+    want = SlotServer(model, params, config=base).serve(parity_queue(cfg))
+
+    tight = EngineConfig(n_slots=2, cache_len=32, pool_blocks=7,
+                         preemption=mode, **knobs)
+    queue = parity_queue(cfg)
+    got = SlotServer(model, params, config=tight).serve(queue)
+
+    assert sum(r.preemptions for r in queue) > 0, \
+        "config did not force a preemption — the parity check is vacuous"
+    assert got == want, (name, got, want)
+
+
+def test_preempt_resume_parity_speculative_fallback(small_model):
+    """A preemption landing mid-speculative-decode must degrade the span
+    growth to vanilla cleanly (span growth never preempts) and still
+    stream identical tokens."""
+    cfg, model, params = small_model
+    knobs = dict(paged=True, page_block=4, chunked_prefill=True, chunk=8,
+                 speculative="ngram", spec_len=4)
+    # repetitive prompts make the n-gram drafter actually propose spans
+    toks = np.tile(np.arange(4, dtype=np.int32), 3)
+    queue = [Request(i, toks.copy(), 6, params=SamplingParams(
+        max_new=6, priority=p, seed=50 + i,
+        temperature=0.0 if i % 2 == 0 else 0.7))
+        for i, p in enumerate((0, 0, 3))]
+    want = SlotServer(model, params, config=EngineConfig(
+        n_slots=2, cache_len=32, **knobs)).serve(
+            [Request(r.rid, r.tokens.copy(), r.max_new, params=r.params)
+             for r in queue])
+    srv = SlotServer(model, params, config=EngineConfig(
+        n_slots=2, cache_len=32, pool_blocks=7, preemption="swap", **knobs))
+    got = srv.serve(queue)
+    assert sum(r.preemptions for r in queue) > 0
+    assert got == want
+
+
+def test_preempt_resume_parity_mixture(small_model):
+    cfg, model, params = small_model
+    K, Df = 2, 8
+    experts = [model.init(jax.random.PRNGKey(k)) for k in range(K)]
+    rng = np.random.default_rng(5)
+    router = CentroidRouter(
+        jnp.asarray(rng.normal(size=(K, Df)), jnp.float32),
+        RouterConfig(top_k=2))
+    knobs = dict(paged=True, page_block=4, chunked_prefill=True, chunk=8,
+                 strategy="mixture")
+
+    def queue():
+        reqs = parity_queue(cfg)
+        feats = rng.spawn(1)[0]  # unused; deterministic features below
+        for i, r in enumerate(reqs):
+            r.features = np.linspace(-1.0, 1.0, Df).astype(np.float32) \
+                * (i + 1)
+        return reqs
+
+    want = MixtureSlotServer(model, experts, router, config=EngineConfig(
+        n_slots=2, cache_len=32, **knobs)).serve(queue())
+    reqs = queue()
+    got = MixtureSlotServer(model, experts, router, config=EngineConfig(
+        n_slots=2, cache_len=32, pool_blocks=7, preemption="recompute",
+        **knobs)).serve(reqs)
+    assert sum(r.preemptions for r in reqs) > 0
+    assert got == want
+
+
+def test_preempt_resume_parity_decentralized_top1(small_model):
+    cfg, model, params = small_model
+    K, Df = 2, 8
+    experts = [model.init(jax.random.PRNGKey(k)) for k in range(K)]
+    rng = np.random.default_rng(6)
+    router = CentroidRouter(
+        jnp.asarray(rng.normal(size=(K, Df)), jnp.float32),
+        RouterConfig(top_k=1))
+    knobs = dict(paged=True, page_block=4, chunked_prefill=True, chunk=8,
+                 strategy="top1")
+    feats = np.ones((3, Df), np.float32)   # all land on one pod -> pressure
+
+    def queue():
+        reqs = parity_queue(cfg)
+        for i, r in enumerate(reqs):
+            r.features = feats[i]
+        return reqs
+
+    want = DecentralizedSlotServer(
+        model, experts, router, config=EngineConfig(
+            n_slots=2, cache_len=32, **knobs)).serve(queue())
+    reqs = queue()
+    got = DecentralizedSlotServer(
+        model, experts, router, config=EngineConfig(
+            n_slots=2, cache_len=32, pool_blocks=7,
+            preemption="recompute", **knobs)).serve(reqs)
+    assert sum(r.preemptions for r in reqs) > 0
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Resource exactness around parks
+# ---------------------------------------------------------------------------
+
+def drive_until(server, pred, max_steps=200):
+    outs = []
+    for _ in range(max_steps):
+        outs += server.step()
+        if pred():
+            return outs
+    raise AssertionError("condition never reached")
+
+
+def test_abort_parked_frees_swapped_state_exactly(small_model):
+    cfg, model, params = small_model
+    server = SlotServer(model, params, config=EngineConfig(
+        n_slots=2, cache_len=32, paged=True, page_block=4, pool_blocks=7,
+        chunked_prefill=True, chunk=8, prefix_cache=True,
+        preemption="swap", sanitize=True))
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+
+    def prompt():
+        return np.concatenate(
+            [shared, rng.integers(0, cfg.vocab, size=4).astype(np.int32)])
+
+    free0 = server.allocator.n_free
+    low = server.add_request(prompt(), SamplingParams(max_new=8, priority=0))
+    drive_until(server, lambda: low in
+                {r.rid for s, r in enumerate(server.slot_req)
+                 if r is not None and not server.prefilling[s]})
+    # two high-priority arrivals force the low one out
+    his = [server.add_request(prompt(),
+                              SamplingParams(max_new=4, priority=2))
+           for _ in range(2)]
+    drive_until(server, lambda: low in server._parked)
+    st = server._parked[low]
+    assert st.mode == "swap" and st.payload is not None
+    held_before = server.allocator.n_free
+    out = server.abort(low)                  # abort() runs check_pool()
+    assert out.finish_reason == "aborted"
+    assert low not in server._parked and st.pinned == ()
+    assert st.payload is None
+    # the park itself held no pool blocks beyond its pins — aborting it
+    # must not free pool blocks directly (pins return refs, not blocks)
+    assert server.allocator.n_free >= held_before
+    drive_until(server, lambda: not server.has_unfinished())
+    stats = server.stats()
+    assert stats["pool_free_blocks"] == \
+        stats["pool_blocks"] - 1 - stats["prefix_cached_blocks"]
+    assert server.allocator.n_free == free0 - stats["prefix_cached_blocks"]
+    server.sanitizer.check_pool()            # and the full scan agrees
+
+
+def test_sanitizer_clean_across_preempt_resume_churn(small_model):
+    cfg, model, params = small_model
+    qos = QoSConfig(tenant_weights=(("a", 2.0), ("b", 1.0)))
+    server = SlotServer(model, params, config=EngineConfig(
+        n_slots=2, cache_len=32, paged=True, page_block=4, pool_blocks=7,
+        chunked_prefill=True, chunk=8, prefix_cache=True,
+        preemption="recompute", qos=qos, sanitize=True))
+    queue = mixed_queue(
+        cfg, lens=(8, 8, 8, 8, 8, 8), budgets=(6, 6, 4, 4, 5, 5),
+        priorities=(0, 0, 2, 2, 1, 0),
+        tenants=("a", "b", "a", "b", "a", "b"))
+    out = server.serve(queue)               # sanitizer raises on any drift
+    assert len(out) == 6
+    assert sum(r.preemptions for r in queue) > 0
+    assert server.sanitizer.violations == 0
+    assert server.sanitizer.checked_steps > 0
+
+
+# ---------------------------------------------------------------------------
+# Admission control + tenant accounting
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_on_queue_depth(small_model):
+    cfg, model, params = small_model
+    server = SlotServer(model, params, config=EngineConfig(
+        n_slots=1, cache_len=32, qos=QoSConfig(max_waiting=2)))
+    rng = np.random.default_rng(9)
+    rids = [server.add_request(
+        rng.integers(0, cfg.vocab, size=6).astype(np.int32),
+        SamplingParams(max_new=2, tenant="t")) for _ in range(3)]
+    assert len(server.waiting) == 2          # the third was shed
+    outs = {}
+    for _ in range(100):
+        for o in server.step():
+            if o.finished:
+                outs[o.rid] = o
+        if not server.has_unfinished():
+            break
+    assert outs[rids[2]].finish_reason == "rejected"
+    assert outs[rids[2]].token_ids == []
+    assert outs[rids[0]].finish_reason == "length"
+    assert outs[rids[1]].finish_reason == "length"
+    assert server.stats()["tenants"]["t"]["rejections"] == 1
+
+
+def test_admission_rejects_on_predicted_ttft(small_model):
+    cfg, model, params = small_model
+    server = SlotServer(model, params, config=EngineConfig(
+        n_slots=1, cache_len=32, paged=True, page_block=4,
+        chunked_prefill=True, chunk=4,
+        qos=QoSConfig(max_predicted_ttft_s=0.05)))
+    rng = np.random.default_rng(10)
+    # before any step the EWMA is cold: accepted unconditionally
+    ok = server.add_request(
+        rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+        SamplingParams(max_new=2))
+    server._step_ewma = 10.0                 # force a saturated backlog ETA
+    shed = server.add_request(
+        rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+        SamplingParams(max_new=2))
+    server._step_ewma = 0.0                  # let the real run proceed
+    outs = {}
+    for _ in range(100):
+        for o in server.step():
+            if o.finished:
+                outs[o.rid] = o
+        if not server.has_unfinished():
+            break
+    assert outs[shed].finish_reason == "rejected"
+    assert outs[ok].finish_reason == "length"
+
+
+def test_stats_tenant_breakdown(small_model):
+    cfg, model, params = small_model
+    qos = QoSConfig(tenant_weights=(("a", 3.0),))
+    server = SlotServer(model, params, config=EngineConfig(
+        n_slots=2, cache_len=32, paged=True, page_block=4, pool_blocks=7,
+        chunked_prefill=True, chunk=8, preemption="recompute", qos=qos))
+    queue = mixed_queue(cfg, lens=(8, 8, 8, 8), budgets=(6, 6, 6, 6),
+                        priorities=(0, 0, 2, 2),
+                        tenants=("a", "b", "a", "b"))
+    out = server.serve(queue)
+    st = server.stats()
+    assert set(st["tenants"]) == {"a", "b"}
+    for t in ("a", "b"):
+        emitted = sum(len(out[r.rid]) for r in queue
+                      if r.params.tenant == t)
+        assert st["tenants"][t]["tokens"] == emitted
+        assert st["tenants"][t]["active_slots"] == 0
+        assert st["tenants"][t]["pool_blocks"] == 0
+    total_preempts = sum(st["tenants"][t]["preemptions"]
+                         for t in ("a", "b"))
+    assert total_preempts == sum(r.preemptions for r in queue) > 0
+    assert st["parked"] == 0
